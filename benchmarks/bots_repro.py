@@ -1,0 +1,107 @@
+"""Paper reproduction benchmarks.
+
+One function per paper figure:
+  * Figs 5–10  — thread-allocation study: six BOTS benchmarks under
+    {bf, cilk, wf} × {baseline Nanos, +NUMA-aware allocation}.
+  * Figs 13–15 — NUMA-aware task schedulers: FFT / Sort / Strassen under
+    {wf, DFWSPT, DFWSRPT} (all with the allocation technique, as in §VI).
+
+Baseline Nanos model: threads unbound (OS migrations), runtime structures
+first-touched on node 0, root arrays spilled from node 0. NUMA model:
+priority-bound threads, local runtime data, arrays spilled from the
+master's (priority-chosen) node. One common serial reference per
+benchmark, as the paper uses one serial time per benchmark.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import placement, priority, topology
+from repro.core.sim import SimParams, bots, serial_time, simulate
+
+TOPO = topology.sunfire_x4600()
+PR = priority.priorities(TOPO)
+PARAMS = SimParams()
+THREADS = (2, 4, 6, 8, 12, 16)
+MIGRATION = 0.15
+
+# benchmarks × spill-node count (≈ dataset GB / node GB, paper §V)
+SPILL = {"fft": 2, "sort": 3, "strassen": 2, "nqueens": 1,
+         "floorplan": 1, "sparselu": 2}
+
+
+def _workload(name):
+    if name == "fft":
+        return bots.fft(n=1 << 15, cutoff=4)
+    if name == "sort":
+        return bots.sort(n=1 << 15, cutoff=4)
+    return bots.make(name, "medium")
+
+
+def run_benchmark(name: str, schedulers=("bf", "cilk", "wf"),
+                  threads=THREADS, seed: int = 0):
+    """Returns {(sched, variant, T): speedup} for one BOTS benchmark."""
+    wl = _workload(name)
+    spill0 = placement.first_touch_spill(TOPO, 0, SPILL[name])
+    serial = serial_time(TOPO, wl, 0, spill0, PARAMS)
+    out = {}
+    for T in threads:
+        base_cores = list(range(T))
+        alloc = priority.allocate_threads(TOPO, T)
+        mn = int(TOPO.core_node[alloc[0]])
+        spill_n = placement.first_touch_spill(TOPO, mn, SPILL[name], PR)
+        for sched in schedulers:
+            r = simulate(TOPO, base_cores, wl, sched, params=PARAMS,
+                         seed=seed, root_data_nodes=spill0,
+                         runtime_data_node=0, migration_rate=MIGRATION,
+                         serial_reference=serial)
+            out[(sched, "base", T)] = r.speedup
+            r = simulate(TOPO, alloc, wl, sched, params=PARAMS, seed=seed,
+                         root_data_nodes=spill_n,
+                         serial_reference=serial)
+            out[(sched, "numa", T)] = r.speedup
+    return out
+
+
+def fig_5_to_10(report, quick=False):
+    """Thread-allocation study (paper Figs 5–10)."""
+    names = ["floorplan", "sparselu", "fft", "strassen", "sort", "nqueens"]
+    threads = (4, 16) if quick else THREADS
+    for name in names:
+        res = run_benchmark(name, threads=threads)
+        for sched in ("bf", "cilk", "wf"):
+            b16 = res[(sched, "base", threads[-1])]
+            n16 = res[(sched, "numa", threads[-1])]
+            gain = (n16 / b16 - 1) * 100
+            report(f"bots/{name}/{sched}@{threads[-1]}",
+                   derived=f"base={b16:.2f}x numa={n16:.2f}x "
+                           f"gain={gain:+.1f}%")
+    return True
+
+
+def fig_13_to_15(report, quick=False):
+    """NUMA-aware task schedulers on FFT / Sort / Strassen (Figs 13–15)."""
+    threads = (16,) if quick else (2, 4, 8, 16)
+    for name in ("fft", "sort", "strassen"):
+        wl = _workload(name)
+        spill0 = placement.first_touch_spill(TOPO, 0, SPILL[name])
+        serial = serial_time(TOPO, wl, 0, spill0, PARAMS)
+        for T in threads:
+            alloc = priority.allocate_threads(TOPO, T)
+            mn = int(TOPO.core_node[alloc[0]])
+            spill = placement.first_touch_spill(TOPO, mn, SPILL[name], PR)
+            sp = {}
+            for sched in ("wf", "dfwspt", "dfwsrpt"):
+                r = simulate(TOPO, alloc, wl, sched, params=PARAMS,
+                             seed=0, root_data_nodes=spill,
+                             serial_reference=serial)
+                sp[sched] = r.speedup
+            if T == threads[-1]:
+                g1 = (sp["dfwspt"] / sp["wf"] - 1) * 100
+                g2 = (sp["dfwsrpt"] / sp["wf"] - 1) * 100
+                report(f"bots-sched/{name}@{T}",
+                       derived=f"wf={sp['wf']:.2f}x "
+                               f"dfwspt={sp['dfwspt']:.2f}x({g1:+.1f}%) "
+                               f"dfwsrpt={sp['dfwsrpt']:.2f}x({g2:+.1f}%)")
+    return True

@@ -1,0 +1,131 @@
+"""§Perf hillclimbs: hypothesis → change → re-lower → measure.
+
+Three cells (see EXPERIMENTS.md §Perf for selection rationale). Each
+variant re-compiles the cell with one change and records the roofline
+terms; results land in artifacts/hillclimb/ and the comparison table is
+printed for the §Perf log.
+
+    PYTHONPATH=src python -m benchmarks.hillclimb [--cell N]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+from benchmarks.roofline import cell_roofline
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts",
+                   "hillclimb")
+
+
+def _run(arch, shape, mesh, variant=None, **kw):
+    from repro.launch.dryrun import run_cell
+    rec = run_cell(arch, shape, mesh, skip_existing=True, variant=variant,
+                   out_dir=ART, **kw)
+    r = cell_roofline(rec)
+    r["variant"] = variant or "baseline"
+    return r
+
+
+def _show(rows):
+    print(f"{'variant':28s} {'compute_s':>10} {'memory_s':>10} "
+          f"{'coll_s':>10} {'dominant':>12} {'mem GiB':>8} {'frac':>7}")
+    for r in rows:
+        print(f"{r['variant']:28s} {r['compute_s']:10.4f} "
+              f"{r['memory_s']:10.4f} {r['collective_s']:10.4f} "
+              f"{r['dominant'][:-2]:>12} {r['memory_gib']:8.2f} "
+              f"{r['roofline_fraction']:7.3f}")
+    return rows
+
+
+def cell_granite():
+    """granite-moe train_4k multi — the paper-technique cell.
+
+    Baseline = paper-faithful (DFWSPT stealing on). Variants probe the
+    dominant term with the technique held fixed, plus the
+    paper-ablation (stealing off) for the §Repro delta.
+    """
+    a, s, m = "granite-moe-1b-a400m", "train_4k", "multi"
+    rows = [_run(a, s, m)]
+    # paper-ablation: vanilla GShard drops instead of locality stealing
+    rows.append(_run(a, s, m, "nosteal",
+                     cfg_overrides=dict(moe_steal_attempts=0)))
+    # H1: grad sync dominates collectives → bf16 accumulation halves it
+    rows.append(_run(a, s, m, "bf16grads",
+                     opt_overrides=dict(factored=True,
+                                        m_dtype="bfloat16")))
+    # H2: smaller routing groups shrink dispatch one-hots (memory) at the
+    # cost of more, smaller expert matmuls
+    rows.append(_run(a, s, m, "group1024",
+                     cfg_overrides=dict(moe_group=1024)))
+    # H3: fewer microbatches → less recompute per step (compute term)
+    rows.append(_run(a, s, m, "micro2", micro_override=2))
+    # H4 (beyond-paper): d_model=1024 over 16-way TP is slivers — drop TP
+    # entirely, keep EP on "model" + FSDP over both axes. Kills the
+    # Megatron all-reduces that dominate this cell.
+    rows.append(_run(a, s, m, "ep-only",
+                     cfg_overrides=dict(sharding_profile="ep_only")))
+    return _show(rows)
+
+
+def cell_commandr():
+    """command-r-35b decode_32k single — memory-bound decode.
+
+    Baseline doubles the KV cache via kv_repeat (TP>kv). Variant:
+    sequence-sharded cache (flash-decoding layout) — no replication.
+    """
+    a, s, m = "command-r-35b", "decode_32k", "single"
+    rows = [_run(a, s, m)]
+    rows.append(_run(a, s, m, "seqshard",
+                     cfg_overrides=dict(
+                         kv_repeat=1,
+                         attn_kv_spec=(("data",), "model", None, None))))
+    rows.append(_run(a, s, m, "seqshard-f32stats",
+                     cfg_overrides=dict(
+                         kv_repeat=1,
+                         attn_chunk_threshold=1 << 30,
+                         attn_kv_spec=(("data",), "model", None, None))))
+    return _show(rows)
+
+
+def cell_jamba():
+    """jamba-398B train_4k single — biggest model, smaller mesh."""
+    a, s, m = "jamba-1.5-large-398b", "train_4k", "single"
+    rows = [_run(a, s, m)]
+    # H1: selective remat (keep matmul outputs) trades memory for flops
+    rows.append(_run(a, s, m, "remat-dots",
+                     cfg_overrides=dict(remat="dots")))
+    # H2: fewer microbatches → fewer recompute passes, more activation mem
+    rows.append(_run(a, s, m, "micro8", micro_override=8))
+    # H3: larger SSD chunks → bigger MXU matmuls, fewer scan steps
+    rows.append(_run(a, s, m, "ssdchunk256",
+                     cfg_overrides=dict(ssm_chunk=256)))
+    # H4: keep shrinking the regather traffic (micro8 confirmed H2)
+    rows.append(_run(a, s, m, "micro4", micro_override=4))
+    return _show(rows)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", type=int, default=0,
+                    help="1=granite 2=command-r 3=jamba; 0=all")
+    args = ap.parse_args()
+    os.makedirs(ART, exist_ok=True)
+    out = {}
+    if args.cell in (0, 1):
+        print("== granite-moe-1b-a400m × train_4k × multi ==")
+        out["granite"] = cell_granite()
+    if args.cell in (0, 2):
+        print("== command-r-35b × decode_32k × single ==")
+        out["commandr"] = cell_commandr()
+    if args.cell in (0, 3):
+        print("== jamba-1.5-large-398b × train_4k × single ==")
+        out["jamba"] = cell_jamba()
+    with open(os.path.join(ART, "summary.json"), "w") as f:
+        json.dump(out, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

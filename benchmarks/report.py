@@ -1,0 +1,88 @@
+"""Generate the data-driven sections of EXPERIMENTS.md (§Dry-run tables,
+§Roofline table) from artifacts/dryrun + artifacts/roofline.json.
+
+    PYTHONPATH=src python -m benchmarks.report > artifacts/report.md
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks import roofline as rf
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "artifacts")
+
+
+def load_cells():
+    cells = []
+    for p in sorted(glob.glob(os.path.join(ARTIFACTS, "dryrun", "*.json"))):
+        with open(p) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def dryrun_table(cells) -> str:
+    out = ["| arch | shape | mesh | status | mem/dev GiB | flops/dev | "
+           "bytes/dev | collectives (count: wire GiB, cross-pod GiB) | "
+           "compile s |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for c in cells:
+        if c.get("status") == "skipped":
+            out.append(f"| {c['arch']} | {c['shape']} | {c['mesh']} | "
+                       f"skip: {c['reason'][:60]} | | | | | |")
+            continue
+        if c.get("status") != "ok":
+            out.append(f"| {c['arch']} | {c['shape']} | {c['mesh']} | "
+                       f"ERROR | | | | | |")
+            continue
+        mem = ((c["memory"]["argument_bytes"] or 0)
+               + (c["memory"]["temp_bytes"] or 0)) / 2**30
+        colls = c.get("collectives") or {}
+        nops = sum(v["count"] for v in colls.values())
+        wire = sum(v.get("wire_bytes", v["bytes"])
+                   for v in colls.values()) / 2**30
+        xwire = sum(v.get("cross_pod_wire_bytes", 0)
+                    for v in colls.values()) / 2**30
+        out.append(
+            f"| {c['arch']} | {c['shape']} | {c['mesh']} | ok | "
+            f"{mem:.2f} | {c['cost']['flops_per_device']:.3e} | "
+            f"{(c['cost']['bytes_accessed_per_device'] or 0):.3e} | "
+            f"{nops}: {wire:.3f}, {xwire:.3f} | {c['compile_s']} |")
+    return "\n".join(out)
+
+
+def collective_breakdown(cells) -> str:
+    """Per-kind collective summary for the multi-pod mesh (train cells)."""
+    out = ["| arch.shape | kind | count | wire GiB/dev | cross-pod GiB |",
+           "|---|---|---|---|---|"]
+    for c in cells:
+        if c.get("status") != "ok" or c["mesh"] != "multi":
+            continue
+        for kind, v in (c.get("collectives") or {}).items():
+            out.append(
+                f"| {c['arch']}.{c['shape']} | {kind} | {v['count']} | "
+                f"{v.get('wire_bytes', v['bytes'])/2**30:.3f} | "
+                f"{v.get('cross_pod_wire_bytes', 0)/2**30:.3f} |")
+    return "\n".join(out)
+
+
+def main():
+    cells = load_cells()
+    rows = rf.analyze()
+    n_ok = sum(1 for c in cells if c.get("status") == "ok")
+    n_skip = sum(1 for c in cells if c.get("status") == "skipped")
+    print("## §Dry-run (generated)\n")
+    print(f"{n_ok} cells compiled, {n_skip} documented skips, "
+          f"{len(cells) - n_ok - n_skip} errors "
+          f"(meshes: 16×16 = 256 chips, 2×16×16 = 512 chips).\n")
+    print(dryrun_table(cells))
+    print("\n### Multi-pod collective schedules (per device)\n")
+    print(collective_breakdown(cells))
+    print("\n## §Roofline (generated)\n")
+    print(rf.markdown_table(rows))
+
+
+if __name__ == "__main__":
+    main()

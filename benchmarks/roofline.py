@@ -1,0 +1,318 @@
+"""Roofline analysis (deliverable (g)): three terms per dry-run cell.
+
+Sources:
+  * ``compiled.cost_analysis()`` / parsed HLO collectives from
+    ``artifacts/dryrun/*.json``. XLA counts every loop *body once*
+    (verified: a scanned matmul reports 1× its body flops regardless of
+    trip count), and our steps nest up to three loops (microbatch scan ×
+    layer scan × chunk scans), so raw HLO numbers are per-body.
+  * closed-form per-cell totals derived from the architecture configs —
+    every matmul in the model is known — give the step totals. The raw
+    per-body HLO numbers are kept in the artifacts as cross-checks, and
+    the collective *schedule* (which kinds, which axes, cross-pod split)
+    comes from the HLO.
+
+Hardware: TPU v5e — 197 TFLOP/s bf16/chip, 819 GB/s HBM,
+50 GB/s/link ICI, 6.25 GB/s/chip DCI (cross-pod).
+
+    compute_s    = total_flops_per_chip / 197e12
+    memory_s     = hbm_bytes_per_chip / 819e9
+    collective_s = ici_bytes / 50e9 + dci_bytes / 6.25e9
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+import numpy as np
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+DCI_BW = 6.25e9
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "artifacts")
+
+
+# ----------------------------------------------------------------------
+# analytic per-cell model
+# ----------------------------------------------------------------------
+
+def _mesh_dims(mesh_kind: str):
+    if mesh_kind == "multi":
+        return dict(devices=512, dp=32, tp=16, pods=2)
+    return dict(devices=256, dp=16, tp=16, pods=1)
+
+
+def analytic_terms(arch: str, shape_name: str, mesh_kind: str,
+                   micro: int, cfg_overrides: dict | None = None,
+                   grad_bytes: float = 4.0) -> dict:
+    """Closed-form flops / HBM bytes / collective bytes per chip per step."""
+    import dataclasses as _dc
+
+    from repro import configs
+    from repro.models import model as model_lib
+
+    cfg = configs.get(arch)
+    overridden = set()
+    if cfg_overrides:
+        ov = {k: (tuple(v) if isinstance(v, list) else v)
+              for k, v in cfg_overrides.items()
+              if hasattr(cfg, k)}
+        overridden = set(ov)
+        cfg = _dc.replace(cfg, **ov)
+    shape = configs.SHAPES[shape_name]
+    m = _mesh_dims(mesh_kind)
+    dev, dp, tp, pods = m["devices"], m["dp"], m["tp"], m["pods"]
+
+    N_total = model_lib.param_count(cfg)
+    N_active = model_lib.active_param_count(cfg)
+    B, S = shape.global_batch, shape.seq_len
+    kind = shape.kind
+    tokens = B * S if kind != "decode" else B
+    tokens_dev = tokens / dp if kind != "decode" else tokens / min(dp, B)
+
+    L_attn = cfg.repeats * sum(1 for k, _ in cfg.pattern if k == "attn")
+    L_cross = cfg.repeats * sum(1 for k, _ in cfg.pattern if k == "cross")
+    L_mamba = cfg.repeats * sum(1 for k, _ in cfg.pattern if k == "mamba")
+    d_attn = cfg.num_heads * cfg.head_dim
+
+    # ---- FLOPs ------------------------------------------------------
+    if kind == "train":
+        remat = 1.5 if len(cfg.pattern) > 1 else 4.0 / 3.0  # nested remat
+        flops = 6.0 * N_active * tokens * remat
+        # causal attention: fwd 2·S²·d (qk+pv halved by causality), ×3 bwd+remat
+        flops += 3.0 * 2.0 * B * S * S * d_attn * L_attn
+        flops += 3.0 * 4.0 * B * S * cfg.num_media_tokens * d_attn * L_cross
+    elif kind == "prefill":
+        flops = 2.0 * N_active * tokens
+        flops += 2.0 * B * S * S * d_attn * L_attn
+        flops += 4.0 * B * S * cfg.num_media_tokens * d_attn * L_cross
+    else:  # decode: one token against an S-long cache / SSM state
+        flops = 2.0 * N_active * B
+        flops += 4.0 * B * S * d_attn * L_attn
+        if L_mamba:
+            d_inner = cfg.ssm_expand * cfg.d_model
+            H = d_inner // cfg.ssm_head_dim
+            flops += 4.0 * B * H * cfg.ssm_state * cfg.ssm_head_dim * L_mamba
+    flops_dev = flops / dev
+
+    # ---- HBM bytes --------------------------------------------------
+    pb = 2.0 * N_total  # bf16 param bytes (global)
+    if kind == "train":
+        # weights: fwd + remat + bwd reads; grads f32 RW; m RW; v RW
+        w_traffic = 3 * pb
+        g_traffic = 2 * 4.0 * N_total
+        m_bytes = 2.0 * N_total if _factored(arch) else 4.0 * N_total
+        v_bytes = 0.1 * N_total if _factored(arch) else 4.0 * N_total
+        o_traffic = 2 * (m_bytes + v_bytes) + 2 * pb  # states RW + param RW
+        act = 16.0 * tokens * cfg.d_model * 2.0       # streamed activations
+        bytes_total = w_traffic + g_traffic + o_traffic + act
+        bytes_dev = bytes_total / dev
+    elif kind == "prefill":
+        act = 8.0 * tokens * cfg.d_model * 2.0
+        kv = 2.0 * tokens * cfg.num_kv_heads * cfg.kv_repeat \
+            * cfg.head_dim * 2.0 * L_attn
+        bytes_dev = (pb + act + kv) / dev
+    else:
+        # decode reads all (active) weights once + the whole KV cache
+        kv = 2.0 * B * S * cfg.num_kv_heads * cfg.head_dim * 2.0 * L_attn
+        kv *= _kv_rep(cfg, tp, overridden)
+        ssm = 0.0
+        if L_mamba:
+            d_inner = cfg.ssm_expand * cfg.d_model
+            H = d_inner // cfg.ssm_head_dim
+            ssm = 4.0 * B * H * cfg.ssm_state * cfg.ssm_head_dim * L_mamba
+        bytes_dev = (2.0 * N_active * _moe_read_frac(cfg) + kv + ssm) / dev
+
+    # ---- collective bytes -------------------------------------------
+    ici = dci = 0.0
+    D = cfg.d_model
+    if kind == "train":
+        # ZeRO-3 regather per microbatch (fwd + bwd) over the data axis
+        gather = 2.0 * micro * (pb / tp) * (dp - 1) / dp
+        # grad sync: reduce-scatter + all-gather of grads over DP
+        gsync = 2.0 * grad_bytes * N_total / tp * (dp - 1) / dp
+        # Megatron-style TP all-reduces: 2 fwd + 2 bwd (+1 remat) per layer
+        tp_ar = 5.0 * 2.0 * (tokens / dp) * D * 2.0 \
+            * cfg.num_layers * (tp - 1) / tp
+        if cfg.sharding_profile == "ep_only":
+            tp_ar = 0.0   # no tensor parallelism: dense weights FSDP-only
+            # but FSDP now spans dp·tp devices → regathers cost more
+            gather = 2.0 * micro * pb * (dp * tp - 1) / (dp * tp)
+        elif cfg.sharding_profile == "ep_replicated":
+            # dense replicated (no gathers, AR grads over all devices);
+            # experts sharded (model × data) — regather D per microbatch
+            n_exp = 2.0 * (N_total - _dense_params(cfg))
+            n_dense = 2.0 * _dense_params(cfg)
+            tp_ar = 0.0
+            gather = 2.0 * micro * (n_exp / tp) * (dp - 1) / dp
+            gsync = 2.0 * grad_bytes * (_dense_params(cfg)
+                                        + (N_total - _dense_params(cfg))
+                                        / tp) * (dp - 1) / dp
+        # MoE all-to-all: dispatch + combine, fwd+bwd (tokens·D each way)
+        a2a = 0.0
+        if cfg.moe_num_experts:
+            L_moe = cfg.repeats * sum(1 for _, f in cfg.pattern
+                                      if f == "moe")
+            a2a = 4.0 * (tokens / dp) * D * 2.0 * L_moe
+        total = gather + gsync + tp_ar + a2a
+        if pods > 1:
+            # the pod axis is pure DP: the cross-pod share of grad sync
+            dci = grad_bytes * N_total / tp / pods
+            ici = total - dci
+        else:
+            ici = total
+    elif kind == "prefill":
+        tp_ar = 2.0 * 2.0 * (tokens / dp) * D * 2.0 * cfg.num_layers \
+            * (tp - 1) / tp
+        if cfg.sharding_profile == "ep_only":
+            tp_ar = 0.0
+        a2a = 0.0
+        if cfg.moe_num_experts:
+            L_moe = cfg.repeats * sum(1 for _, f in cfg.pattern
+                                      if f == "moe")
+            a2a = 2.0 * (tokens / dp) * D * 2.0 * L_moe
+        ici = tp_ar + a2a
+    else:
+        rows_dev = B / min(dp, B)
+        tp_ar = 2.0 * 2.0 * rows_dev * D * 2.0 * cfg.num_layers \
+            * (tp - 1) / tp
+        ici = tp_ar
+    return dict(flops_dev=flops_dev, bytes_dev=bytes_dev,
+                ici_bytes=ici, dci_bytes=dci,
+                model_flops_dev=(6.0 if kind == "train" else 2.0)
+                * N_active * tokens / dev)
+
+
+def _dense_params(cfg) -> float:
+    from repro.models import model as model_lib
+    na = model_lib.active_param_count(cfg)
+    nt = model_lib.param_count(cfg)
+    # expert params = total - active-adjusted share; dense ≈ the rest
+    exp_total = (nt - na) / (1 - cfg.moe_top_k / max(cfg.moe_num_experts, 1)) \
+        if cfg.moe_num_experts else 0.0
+    return max(nt - exp_total, 0.0)
+
+
+def _factored(arch: str) -> bool:
+    from repro.launch.dryrun import FACTORED_OPT
+    return arch in FACTORED_OPT
+
+
+def _kv_rep(cfg, tp, overridden=()) -> float:
+    """Effective stored-head replication. The launcher (adapt_config)
+    infers it per mesh; an explicit override pins it."""
+    if "kv_repeat" in overridden or cfg.kv_repeat > 1:
+        return float(cfg.kv_repeat)
+    kv = cfg.num_kv_heads
+    if cfg.num_heads > 1 and kv < tp and tp % kv == 0 \
+            and cfg.num_heads % (kv * (tp // kv)) == 0:
+        return tp / kv
+    return 1.0
+
+
+def _moe_read_frac(cfg) -> float:
+    """Decode batches re-read most experts: with B tokens over E experts,
+    expected touched experts ≈ E·(1-(1-k/E)^B) → weight reads exceed the
+    per-token active fraction. Approximate with full expert reads when
+    B ≥ E (the decode_32k cells)."""
+    if not cfg.moe_num_experts:
+        return 1.0
+    from repro.models import model as model_lib
+    na = model_lib.active_param_count(cfg)
+    nt = model_lib.param_count(cfg)
+    return nt / na  # active→total correction (B=128 ≥ E for our cells)
+
+
+# ----------------------------------------------------------------------
+
+def cell_roofline(rec: dict) -> dict | None:
+    if rec.get("status") != "ok":
+        return None
+    micro = rec.get("microbatches", 1)
+    gb = 2.0 if rec.get("grad_acc_dtype") == "bfloat16" else 4.0
+    a = analytic_terms(rec["arch"], rec["shape"], rec["mesh"], micro,
+                       cfg_overrides=rec.get("cfg_overrides"),
+                       grad_bytes=gb)
+
+    # fold the HLO-observed cross-pod share into the DCI split: if the
+    # compiled schedule moved a larger fraction across pods than the
+    # analytic DP-only model, trust the schedule's ratio.
+    colls = rec.get("collectives") or {}
+    hlo_wire = sum(v.get("wire_bytes", v.get("bytes", 0))
+                   for v in colls.values())
+    hlo_x = sum(v.get("cross_pod_wire_bytes", 0) for v in colls.values())
+    if hlo_wire > 0 and rec["mesh"] == "multi":
+        x_frac = hlo_x / hlo_wire
+        total = a["ici_bytes"] + a["dci_bytes"]
+        dci = max(a["dci_bytes"], x_frac * total)
+        a["dci_bytes"], a["ici_bytes"] = dci, total - dci
+
+    compute_s = a["flops_dev"] / PEAK_FLOPS
+    memory_s = a["bytes_dev"] / HBM_BW
+    collective_s = a["ici_bytes"] / ICI_BW + a["dci_bytes"] / DCI_BW
+    terms = dict(compute_s=compute_s, memory_s=memory_s,
+                 collective_s=collective_s)
+    dominant = max(terms, key=terms.get)
+    step_s = max(terms.values())
+    useful = a["model_flops_dev"] / a["flops_dev"] if a["flops_dev"] else 0
+    frac = (a["model_flops_dev"] / PEAK_FLOPS) / step_s if step_s else 0.0
+    return dict(
+        cell=f"{rec['arch']}|{rec['shape']}|{rec['mesh']}",
+        kind=rec.get("kind"),
+        **{k: round(v, 6) for k, v in terms.items()},
+        dominant=dominant,
+        model_flops_per_device=a["model_flops_dev"],
+        hlo_body_flops_per_device=rec["cost"]["flops_per_device"],
+        useful_flops_ratio=round(useful, 4),
+        roofline_fraction=round(frac, 4),
+        memory_gib=round(((rec["memory"]["argument_bytes"] or 0)
+                          + (rec["memory"]["temp_bytes"] or 0)) / 2**30, 2),
+        variant=rec.get("variant"),
+    )
+
+
+def analyze(report=None, quick=False) -> list[dict]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(ARTIFACTS, "dryrun",
+                                              "*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        r = cell_roofline(rec)
+        if r:
+            rows.append(r)
+    out_path = os.path.join(ARTIFACTS, "roofline.json")
+    with open(out_path, "w") as f:
+        json.dump(rows, f, indent=1)
+    if report is not None:
+        for r in rows:
+            report(f"roofline/{r['cell']}",
+                   derived=f"dom={r['dominant'][:-2]} "
+                           f"c={r['compute_s']*1e3:.2f}ms "
+                           f"m={r['memory_s']*1e3:.2f}ms "
+                           f"coll={r['collective_s']*1e3:.2f}ms "
+                           f"frac={r['roofline_fraction']:.3f}")
+    return rows
+
+
+def markdown_table(rows: list[dict]) -> str:
+    hdr = ("| cell | kind | compute s | memory s | collective s | dominant "
+           "| useful/HLO | roofline frac | raw mem GiB |\n"
+           "|---|---|---|---|---|---|---|---|---|\n")
+    lines = []
+    for r in rows:
+        lines.append(
+            f"| {r['cell']} | {r['kind']} | {r['compute_s']:.4f} | "
+            f"{r['memory_s']:.4f} | {r['collective_s']:.4f} | "
+            f"{r['dominant'].replace('_s','')} | "
+            f"{r['useful_flops_ratio']:.3f} | "
+            f"{r['roofline_fraction']:.3f} | {r['memory_gib']} |")
+    return hdr + "\n".join(lines)
+
+
+if __name__ == "__main__":
+    rows = analyze()
+    print(markdown_table(rows))

@@ -1,0 +1,54 @@
+"""Benchmark harness: one entry per paper table/figure + framework benches.
+
+Prints ``name,us_per_call,derived`` CSV rows.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--only PREFIX]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="run only benches whose name starts with this")
+    args = ap.parse_args()
+
+    rows: list[tuple[str, float | None, str]] = []
+
+    def report(name: str, us: float | None = None, derived: str = ""):
+        rows.append((name, us, derived))
+        us_s = f"{us:.1f}" if us is not None else ""
+        print(f"{name},{us_s},{derived}", flush=True)
+
+    from benchmarks import bots_repro, framework, roofline
+
+    benches = [
+        ("bots/figs5-10", lambda: bots_repro.fig_5_to_10(report,
+                                                         args.quick)),
+        ("bots/figs13-15", lambda: bots_repro.fig_13_to_15(report,
+                                                           args.quick)),
+        ("mesh-layout", lambda: framework.mesh_layout(report, args.quick)),
+        ("moe-locality", lambda: framework.moe_locality(report, args.quick)),
+        ("kernels", lambda: framework.kernels(report, args.quick)),
+        ("roofline", lambda: roofline.analyze(report, args.quick)),
+    ]
+    print("name,us_per_call,derived")
+    for name, fn in benches:
+        if args.only and not name.startswith(args.only):
+            continue
+        t0 = time.time()
+        try:
+            fn()
+        except Exception as e:  # keep the harness running; surface the error
+            report(f"{name}/ERROR", derived=f"{type(e).__name__}: {e}")
+        print(f"# {name} done in {time.time() - t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,18 @@
+"""Batched serving example: prefill + decode across architectures,
+comparing attention-cache vs SSM-state serving costs.
+
+    PYTHONPATH=src python examples/serve_batch.py
+"""
+
+from repro.launch import serve
+
+
+def main():
+    for arch in ("qwen2.5-3b", "mamba2-1.3b", "jamba-1.5-large-398b"):
+        print(f"\n=== {arch} (reduced config) ===")
+        serve.main(["--arch", arch, "--reduced", "--batch", "4",
+                    "--prompt-len", "64", "--gen", "16"])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+from .checkpoint import CheckpointManager, latest_step, restore, save
+__all__ = ["CheckpointManager", "save", "restore", "latest_step"]

@@ -1,0 +1,223 @@
+"""Sharded, atomic, async checkpointing with cross-mesh (elastic) restore.
+
+Layout on disk::
+
+    <dir>/step_000123/          (atomic: written as .tmp_step_000123, renamed)
+        index.json              tree structure, shapes, dtypes, mesh info
+        shard_<host>_<n>.npz    per-addressable-shard arrays
+
+Key properties for thousand-node operation:
+  * every host writes only its addressable shards (no gather-to-host-0);
+  * ``index.json`` records the global shape + shard index maps, so a
+    restore may target a *different* mesh (elastic shrink/grow): shards
+    are reassembled to global arrays then re-dispatched under the new
+    sharding;
+  * writes go through a background thread (off the step critical path)
+    and a ``.tmp`` → rename commit, so a failure mid-write never corrupts
+    the latest checkpoint;
+  * ``keep_last`` garbage-collects old steps after a successful commit.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import threading
+from typing import Any
+
+import jax
+import numpy as np
+
+__all__ = ["save", "restore", "latest_step", "CheckpointManager"]
+
+_STEP_RE = re.compile(r"^step_(\d{9})$")
+
+
+def _undo_void(arr: np.ndarray, dtype: np.dtype) -> np.ndarray:
+    """npz round-trips ml_dtypes (bfloat16, fp8) as raw void — view back."""
+    if arr.dtype.kind == "V":
+        return arr.view(dtype)
+    return arr
+
+
+def _flatten(tree: Any) -> dict[str, Any]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(_path_str(p) for p in path)
+        flat[key] = leaf
+    return flat
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return f"[{p.idx}]"
+    if hasattr(p, "name"):
+        return str(p.name)
+    return str(p)
+
+
+def latest_step(directory: str) -> int | None:
+    if not os.path.isdir(directory):
+        return None
+    steps = [int(m.group(1)) for d in os.listdir(directory)
+             if (m := _STEP_RE.match(d))]
+    return max(steps) if steps else None
+
+
+def save(directory: str, step: int, tree: Any,
+         host_id: int = 0, num_hosts: int = 1) -> str:
+    """Write one checkpoint step (synchronous). Returns committed path."""
+    name = f"step_{step:09d}"
+    tmp = os.path.join(directory, f".tmp_{name}_{host_id}")
+    final = os.path.join(directory, name)
+    os.makedirs(tmp, exist_ok=True)
+
+    flat = _flatten(tree)
+    index: dict[str, Any] = {"step": step, "arrays": {}, "num_hosts": num_hosts}
+    shard_payload: dict[str, np.ndarray] = {}
+    for key, leaf in flat.items():
+        arr = leaf
+        meta: dict[str, Any] = {
+            "shape": list(np.shape(arr)),
+            "dtype": str(np.asarray(jax.device_get(arr)).dtype
+                         if not hasattr(arr, "dtype") else arr.dtype),
+        }
+        if isinstance(arr, jax.Array) and len(arr.sharding.device_set) > 1:
+            # sharded: each host stores addressable shards + index map
+            shards = []
+            for i, sh in enumerate(arr.addressable_shards):
+                sid = f"{key}::shard{sh.device.id}"
+                shard_payload[sid] = np.asarray(sh.data)
+                shards.append({
+                    "id": sid,
+                    "index": [[s.start, s.stop] if isinstance(s, slice)
+                              else s for s in _index_slices(sh.index,
+                                                            arr.shape)],
+                })
+            meta["shards"] = shards
+        else:
+            sid = f"{key}::full"
+            shard_payload[sid] = np.asarray(jax.device_get(arr))
+            meta["full"] = sid
+        index["arrays"][key] = meta
+
+    np.savez(os.path.join(tmp, f"shard_{host_id}.npz"), **shard_payload)
+    with open(os.path.join(tmp, "index.json"), "w") as f:
+        json.dump(index, f)
+    if os.path.isdir(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    return final
+
+
+def _index_slices(idx, shape):
+    out = []
+    for s, dim in zip(idx, shape):
+        if isinstance(s, slice):
+            out.append(slice(s.start or 0, s.stop if s.stop is not None
+                             else dim))
+        else:
+            out.append(s)
+    return out
+
+
+def restore(directory: str, step: int, like: Any,
+            shardings: Any | None = None) -> Any:
+    """Restore a step into the structure of ``like``.
+
+    ``like`` provides the pytree structure (arrays or ShapeDtypeStructs).
+    ``shardings``: optional matching tree of NamedShardings for the
+    (possibly different) target mesh — elastic restore reassembles global
+    arrays from the saved shard index and re-dispatches.
+    """
+    path = os.path.join(directory, f"step_{step:09d}")
+    with open(os.path.join(path, "index.json")) as f:
+        index = json.load(f)
+    payload: dict[str, np.ndarray] = {}
+    for fn in sorted(os.listdir(path)):
+        if fn.startswith("shard_") and fn.endswith(".npz"):
+            with np.load(os.path.join(path, fn)) as z:
+                payload.update({k: z[k] for k in z.files})
+
+    flat_like, tdef = jax.tree_util.tree_flatten_with_path(like)
+    flat_sh = (jax.tree.leaves(shardings) if shardings is not None
+               else [None] * len(flat_like))
+    out = []
+    for (pth, leaf), sh in zip(flat_like, flat_sh):
+        key = "/".join(_path_str(p) for p in pth)
+        meta = index["arrays"].get(key)
+        if meta is None:
+            raise KeyError(f"checkpoint missing {key}")
+        saved_dt = np.dtype(meta["dtype"])
+        if "full" in meta:
+            arr = _undo_void(payload[meta["full"]], saved_dt)
+        else:
+            arr = np.zeros(meta["shape"], dtype=saved_dt)
+            for sd in meta["shards"]:
+                sl = tuple(slice(p[0], p[1]) if isinstance(p, list) else p
+                           for p in sd["index"])
+                arr[sl] = _undo_void(payload[sd["id"]], saved_dt)
+        target = np.dtype(str(getattr(leaf, "dtype", arr.dtype)))
+        if arr.dtype != target:
+            arr = arr.astype(target)
+        if sh is not None:
+            out.append(jax.device_put(arr, sh))
+        else:
+            out.append(jax.numpy.asarray(arr))
+    return tdef.unflatten(out)
+
+
+class CheckpointManager:
+    """Async keep-last-k manager used by the training driver."""
+
+    def __init__(self, directory: str, keep_last: int = 3,
+                 host_id: int = 0, num_hosts: int = 1):
+        self.directory = directory
+        self.keep_last = keep_last
+        self.host_id = host_id
+        self.num_hosts = num_hosts
+        self._thread: threading.Thread | None = None
+        os.makedirs(directory, exist_ok=True)
+
+    def save_async(self, step: int, tree: Any):
+        # snapshot to host memory on the caller thread (cheap, consistent),
+        # write in the background (off the critical path).
+        host_tree = jax.tree.map(
+            lambda x: np.asarray(jax.device_get(x)), tree)
+        self.wait()
+
+        def work():
+            save(self.directory, step, host_tree,
+                 self.host_id, self.num_hosts)
+            self._gc()
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def save_sync(self, step: int, tree: Any):
+        self.wait()
+        save(self.directory, step, tree, self.host_id, self.num_hosts)
+        self._gc()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def restore_latest(self, like: Any, shardings: Any | None = None):
+        self.wait()
+        step = latest_step(self.directory)
+        if step is None:
+            return None, None
+        return step, restore(self.directory, step, like, shardings)
+
+    def _gc(self):
+        steps = sorted(int(m.group(1)) for d in os.listdir(self.directory)
+                       if (m := _STEP_RE.match(d)))
+        for s in steps[:-self.keep_last]:
+            shutil.rmtree(os.path.join(self.directory, f"step_{s:09d}"),
+                          ignore_errors=True)

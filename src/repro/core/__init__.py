@@ -1,0 +1,17 @@
+"""The paper's contribution: NUMA-aware allocation + locality scheduling.
+
+Faithful layer: topology, priority, stealing, sim (NANOS/BOTS model).
+TPU adaptation: placement (mesh layout), routing (MoE overflow stealing).
+"""
+
+from . import placement, priority, routing, stealing, topology
+from .priority import allocate_threads, priorities
+from .routing import RoutingConfig, expert_steal_table, route
+from .topology import Topology, multi_pod, sunfire_x4600, tpu_pod_2d, uma
+
+__all__ = [
+    "placement", "priority", "routing", "stealing", "topology",
+    "allocate_threads", "priorities", "RoutingConfig",
+    "expert_steal_table", "route", "Topology", "multi_pod",
+    "sunfire_x4600", "tpu_pod_2d", "uma",
+]

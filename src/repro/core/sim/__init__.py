@@ -1,0 +1,3 @@
+from .runtime import (TaskSpec, Workload, SimParams, SimResult, simulate,
+                      serial_time, SCHEDULERS)
+from . import bots

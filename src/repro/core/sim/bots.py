@@ -1,0 +1,158 @@
+"""BOTS-like task-DAG generators (paper §V benchmarks).
+
+Each generator reproduces the *tasking structure* of the corresponding
+Barcelona OpenMP Task Suite benchmark — recursion shape, fan-out, parallel
+combine waves after taskwaits, and memory profile — at a
+simulation-friendly scale. Work units are arbitrary (the simulator reports
+speedups, which is what the paper reports too).
+
+Memory profiles (``mem_intensity``, ``f_root``, ``f_parent``) follow the
+paper's characterization: FFT / Strassen / Sort are "data intensive"
+(multi-GB arrays allocated by the master → large first-touch/root traffic)
+while NQueens / Floorplan are compute-dominated.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .runtime import TaskSpec, Workload
+
+__all__ = ["fft", "sort", "strassen", "nqueens", "floorplan", "sparselu",
+           "WORKLOADS", "make"]
+
+
+def _wave(total_work: float, chunk: float, f_root: float,
+          f_parent: float) -> list[TaskSpec]:
+    """A parallel combine wave: ~total_work split into chunk-sized tasks."""
+    n = max(1, int(round(total_work / chunk)))
+    w = total_work / n
+    return [TaskSpec(work_pre=w, f_root=f_root, f_parent=f_parent)
+            for _ in range(n)]
+
+
+def fft(n: int = 1 << 15, cutoff: int = 1 << 4) -> Workload:
+    """Cooley-Tukey recursion: two half-size sub-FFTs, then a parallel
+    butterfly/twiddle wave (BOTS parallelizes the combine too).
+
+    BOTS FFT (medium) spawns ~10M tasks over ~6 GB of master-allocated
+    arrays; the butterfly wave streams the full root array → high f_root.
+    Scaled here to ~n/cutoff leaf tasks.
+    """
+    def rec(m: int) -> TaskSpec:
+        if m <= cutoff:
+            return TaskSpec(work_pre=m * np.log2(max(m, 2)),
+                            f_root=0.75, f_parent=0.25)
+        kids = [rec(m // 2), rec(m // 2)]
+        post = _wave(1.0 * m, chunk=4.0 * cutoff, f_root=0.8, f_parent=0.2)
+        return TaskSpec(work_pre=0.1 * m, work_post=0.05 * m,
+                        f_root=0.8, f_parent=0.2,
+                        children=kids, post_children=post)
+    return Workload("fft", rec(n), mem_intensity=0.9)
+
+
+def sort(n: int = 1 << 15, cutoff: int = 1 << 4) -> Workload:
+    """BOTS sort (cilksort): 4-way split, parallel merge wave after the
+    taskwait. 8.5 GB root array (large input) ⇒ data intensive."""
+    def rec(m: int) -> TaskSpec:
+        if m <= cutoff:
+            return TaskSpec(work_pre=m * np.log2(max(m, 2)),
+                            f_root=0.7, f_parent=0.3)
+        kids = [rec(m // 4) for _ in range(4)]
+        post = _wave(1.2 * m, chunk=4.0 * cutoff, f_root=0.75, f_parent=0.25)
+        return TaskSpec(work_pre=0.05 * m, work_post=0.05 * m,
+                        f_root=0.75, f_parent=0.25,
+                        children=kids, post_children=post)
+    return Workload("sort", rec(n), mem_intensity=0.8)
+
+
+def strassen(depth: int = 5, base_work: float = 512.0) -> Workload:
+    """Strassen: 7 recursive multiplies, then a parallel add/sub wave.
+
+    ~7 GB of matrices; adds/subs at every level stream big temporaries →
+    high parent-locality payoff, which is why the paper sees the largest
+    scheduler win here (+17% DFWSRPT).
+    """
+    def rec(d: int) -> TaskSpec:
+        # matrices at depth d have (1/2^d)^2 the area; work ~ area^1.5.
+        area = 4.0 ** (depth - d)
+        if d == 0:
+            return TaskSpec(work_pre=base_work, f_root=0.45, f_parent=0.55)
+        kids = [rec(d - 1) for _ in range(7)]
+        post = _wave(2.0 * area, chunk=32.0, f_root=0.4, f_parent=0.6)
+        return TaskSpec(work_pre=0.3 * area, work_post=0.05 * area,
+                        f_root=0.4, f_parent=0.6,
+                        children=kids, post_children=post)
+    return Workload("strassen", rec(depth), mem_intensity=0.85)
+
+
+def nqueens(n: int = 11, cutoff_depth: int = 4, seed: int = 0) -> Workload:
+    """NQueens: irregular tree, tiny per-task state (the board copy) —
+    compute bound, so NUMA effects are small (paper: +1.35% at best) and
+    breadth-first's perfect balancing wins."""
+    rng = np.random.RandomState(seed)
+
+    def rec(depth: int, branch: int) -> TaskSpec:
+        if depth >= cutoff_depth:
+            # leaf explores the remaining subtree serially
+            w = float(rng.randint(40, 120)) * (n - depth)
+            return TaskSpec(work_pre=w, f_root=0.05, f_parent=0.1)
+        # some placements are pruned — irregular fan-out
+        k = max(1, branch - int(rng.randint(0, max(branch // 2, 1))))
+        kids = [rec(depth + 1, branch - 1) for _ in range(k)]
+        return TaskSpec(work_pre=2.0, work_post=0.5,
+                        f_root=0.05, f_parent=0.1, children=kids)
+    return Workload("nqueens", rec(0, n), mem_intensity=0.15)
+
+
+def floorplan(branch: int = 6, depth: int = 5, seed: int = 1) -> Workload:
+    """Floorplan: branch-and-bound over cell placements; small shared
+    grid, moderate locality."""
+    rng = np.random.RandomState(seed)
+
+    def rec(d: int) -> TaskSpec:
+        if d >= depth:
+            return TaskSpec(work_pre=float(rng.randint(20, 80)),
+                            f_root=0.2, f_parent=0.2)
+        k = max(1, branch - int(rng.randint(0, branch // 2 + 1)))
+        kids = [rec(d + 1) for _ in range(k)]
+        return TaskSpec(work_pre=3.0, work_post=1.0,
+                        f_root=0.2, f_parent=0.2, children=kids)
+    return Workload("floorplan", rec(0), mem_intensity=0.3)
+
+
+def sparselu(n: int = 20) -> Workload:
+    """SparseLU (omp-for flavour): sequential outer k-loop, each step
+    spawning a wide wave of block-update tasks over the master-allocated
+    blocked matrix. The k-chain is modeled with nested post-waves."""
+    def step(k: int) -> TaskSpec:
+        wave = [TaskSpec(work_pre=30.0, f_root=0.6, f_parent=0.2)
+                for _ in range(max(1, k * k // 4))]
+        nxt = [step(k - 1)] if k > 1 else []
+        # diagonal factorization (serial) → update wave → next k step
+        return TaskSpec(work_pre=10.0, work_post=2.0, f_root=0.6,
+                        f_parent=0.1, children=wave, post_children=nxt)
+    return Workload("sparselu", step(n - 1), mem_intensity=0.7)
+
+
+WORKLOADS = {
+    "fft": fft, "sort": sort, "strassen": strassen,
+    "nqueens": nqueens, "floorplan": floorplan, "sparselu": sparselu,
+}
+
+
+def make(name: str, scale: str = "medium") -> Workload:
+    """Scaled instances. 'medium'/'large' mirror the paper's input sets."""
+    if name == "fft":
+        return fft(n=(1 << 15) if scale == "medium" else (1 << 16))
+    if name == "sort":
+        return sort(n=(1 << 15) if scale == "medium" else (1 << 16))
+    if name == "strassen":
+        return strassen(depth=5 if scale == "medium" else 6)
+    if name == "nqueens":
+        return nqueens(n=11 if scale == "medium" else 12)
+    if name == "floorplan":
+        return floorplan(depth=5 if scale == "medium" else 6)
+    if name == "sparselu":
+        return sparselu(n=20 if scale == "medium" else 28)
+    raise KeyError(name)

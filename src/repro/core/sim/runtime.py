@@ -1,0 +1,446 @@
+"""Discrete-event simulator of the NANOS task runtime on a NUMA machine.
+
+This is the *paper-faithful* reproduction layer: OpenMP-style tasking with
+per-thread LIFO task pools, the three stock Nanos schedulers the paper
+benchmarks against (breadth-first, Cilk-based, work-first), and the two
+NUMA-aware schedulers the paper contributes (DFWSPT, DFWSRPT), running on
+an explicit hop-distance topology with a first-touch memory model.
+
+Machine/cost model (constants in :class:`SimParams`):
+
+* executing a task on core ``c`` costs::
+
+      work * (1 + mem_intensity * hop_lambda *
+                 (f_root * d(c, root_data_node) + f_parent * d(c, parent_exec_node)))
+
+  ``root_data_node`` is where the benchmark's big arrays were allocated —
+  the node of the *master thread's* core under Linux first-touch (paper
+  §V.B); ``parent_exec_node`` is where the task's parent ran (temporaries
+  + hot caches), so depth-first execution on the same core is free of the
+  second term, exactly the locality the paper exploits.
+
+* the breadth-first scheduler's single shared queue is a serialized
+  resource (a lock): every push/pop waits for the previous holder. With
+  millions of tiny tasks this serialization collapses scalability — the
+  paper's FFT observation (speedup 4.43x@6 cores → 2.39x@16).
+
+* a steal probe on a victim at ``d`` hops costs
+  ``steal_time * (1 + hop_lambda_steal * d)`` — remote queue metadata
+  lives in the victim's node memory.
+
+The simulator is deterministic given (workload, params, seed).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Callable, Optional, Sequence
+
+import numpy as np
+
+from ..topology import Topology
+from ..stealing import victim_order
+
+__all__ = [
+    "TaskSpec", "Workload", "SimParams", "SimResult", "simulate",
+    "serial_time", "SCHEDULERS",
+]
+
+
+def serial_time(topo: "Topology", workload: "Workload", core: int,
+                root_data_nodes, params: "SimParams | None" = None) -> float:
+    """Single-thread execution time on ``core`` under the NUMA cost model.
+
+    Depth-first on one core ⇒ parent data always local (d_parent = 0);
+    only the root-array distance (incl. spill interleave) is paid.
+    """
+    p = params or SimParams()
+    if root_data_nodes is None:
+        root_data_nodes = [int(topo.core_node[core])]
+    elif isinstance(root_data_nodes, (int, np.integer)):
+        root_data_nodes = [int(root_data_nodes)]
+    d_root = float(topo.node_distance[:, list(root_data_nodes)]
+                   .mean(axis=1)[topo.core_node[core]])
+    total = 0.0
+    stack = [workload.root]
+    while stack:
+        s = stack.pop()
+        w = s.work_pre + s.work_post
+        total += w * (1.0 + workload.mem_intensity * p.hop_lambda
+                      * s.f_root * d_root)
+        stack.extend(s.children)
+        stack.extend(s.post_children)
+    return total
+
+SCHEDULERS = ("bf", "cilk", "wf", "dfwspt", "dfwsrpt")
+
+
+@dataclasses.dataclass
+class TaskSpec:
+    """A node of the benchmark's task tree.
+
+    work_pre:  compute units before spawning children.
+    work_post: compute units of the join continuation (0 = no taskwait).
+    f_root:    fraction of this task's memory traffic hitting the root
+               arrays (allocated by master at startup, first-touch).
+    f_parent:  fraction hitting the parent's temporaries / caches.
+    children:  sub-tasks spawned after work_pre.
+    """
+    work_pre: float
+    work_post: float = 0.0
+    f_root: float = 0.0
+    f_parent: float = 0.0
+    children: list["TaskSpec"] = dataclasses.field(default_factory=list)
+    # spawned when all ``children`` complete (BOTS-style parallel combine
+    # wave after a taskwait); ``work_post`` runs after *these* complete.
+    post_children: list["TaskSpec"] = dataclasses.field(default_factory=list)
+
+    def count(self) -> int:
+        stack, n = [self], 0
+        while stack:
+            t = stack.pop()
+            n += 1
+            stack.extend(t.children)
+            stack.extend(t.post_children)
+        return n
+
+    def total_work(self) -> float:
+        stack, w = [self], 0.0
+        while stack:
+            t = stack.pop()
+            w += t.work_pre + t.work_post
+            stack.extend(t.children)
+            stack.extend(t.post_children)
+        return w
+
+
+@dataclasses.dataclass
+class Workload:
+    name: str
+    root: TaskSpec
+    mem_intensity: float  # µ — how memory-bound the benchmark is (0..~1)
+
+
+@dataclasses.dataclass
+class SimParams:
+    hop_lambda: float = 0.4         # NUMA factor slope per hop (exec)
+    hop_lambda_steal: float = 2.0   # per-hop slope for steal probes
+    lock_time: float = 0.25         # serialized shared-queue op cost
+    deque_lock_time: float = 0.4    # victim-deque serialized op cost
+    steal_time: float = 1.5         # base steal probe cost
+    spawn_time: float = 0.02        # per-child task-creation overhead
+    wake_latency: float = 0.05      # parked thread wake-up latency
+    qop_time: float = 0.05          # local task-pool push/pop cost
+    cache_refill: float = 4.0       # work units lost per thread migration
+
+
+@dataclasses.dataclass
+class SimResult:
+    makespan: float
+    serial_time: float
+    speedup: float
+    tasks: int
+    steals: int
+    failed_probes: int
+    remote_work_fraction: float  # share of exec time that was NUMA penalty
+    queue_wait: float            # total time spent waiting on the bf lock
+
+
+# ----------------------------------------------------------------------
+# Internal runtime records
+# ----------------------------------------------------------------------
+
+class _Run:
+    """A live task instance."""
+    __slots__ = ("spec", "parent", "pending", "exec_node", "parent_node",
+                 "phase")
+
+    def __init__(self, spec: TaskSpec, parent: Optional["_Run"], parent_node: int):
+        self.spec = spec
+        self.parent = parent
+        self.pending = 0           # children not yet fully complete
+        self.exec_node = -1        # node where work_pre ran (first touch)
+        self.parent_node = parent_node
+        self.phase = 0             # 0 = children wave, 1 = post wave
+
+
+class _Serialized:
+    """A lock: serialized access, each op occupies ``op_time``."""
+    __slots__ = ("free_at", "op_time", "waited")
+
+    def __init__(self, op_time: float):
+        self.free_at = 0.0
+        self.op_time = op_time
+        self.waited = 0.0
+
+    def acquire(self, t: float) -> float:
+        """Returns the time the op *completes*; accumulates wait time."""
+        start = max(t, self.free_at)
+        self.waited += start - t
+        self.free_at = start + self.op_time
+        return self.free_at
+
+
+def simulate(topo: Topology,
+             thread_cores: Sequence[int],
+             workload: Workload,
+             scheduler: str,
+             params: SimParams | None = None,
+             seed: int = 0,
+             root_data_nodes: int | Sequence[int] | None = None,
+             runtime_data_node: int | None = None,
+             migration_rate: float = 0.0,
+             serial_reference: float | None = None) -> SimResult:
+    """Run ``workload`` on ``len(thread_cores)`` threads; return metrics.
+
+    Args:
+      thread_cores: core id per thread; thread 0 is the master (its node
+        receives the root arrays under first-touch unless overridden).
+      scheduler: one of ``SCHEDULERS``.
+      root_data_nodes: node(s) holding the benchmark's big arrays. Large
+        inputs spill over several nodes (Linux first-touch falls back to
+        nearby nodes when one fills — paper §V.B); pages are interleaved
+        over the spill set, so the access distance is the mean over it.
+        Default: the master thread's node (no spill).
+      runtime_data_node: baseline Nanos first-touches *runtime* structures
+        (task pools, descriptors) on the initializing master's node — pass
+        that node to model it. ``None`` models the paper's modification:
+        each thread's runtime data lives on its own node (paper §IV end).
+      migration_rate: probability per task that the OS migrates the
+        executing thread to another core (baseline Nanos does not pin
+        threads; the paper's extension binds them). A migration pays a
+        cache-refill cost and lands the depth-first chain on a new node.
+      serial_reference: serial time for the speedup denominator. Default:
+        :func:`serial_time` on the master core with the same data nodes.
+        Pass one common value when comparing variants like the paper does.
+    """
+    if scheduler not in SCHEDULERS:
+        raise ValueError(f"unknown scheduler {scheduler!r}")
+    p = params or SimParams()
+    rng = np.random.RandomState(seed)
+    T = len(thread_cores)
+    dist = topo.core_distance_matrix()
+    core_node = topo.core_node
+    node_dist = topo.node_distance
+    cores = list(thread_cores)
+    if root_data_nodes is None:
+        root_data_nodes = [int(core_node[cores[0]])]
+    elif isinstance(root_data_nodes, (int, np.integer)):
+        root_data_nodes = [int(root_data_nodes)]
+    # mean hop distance from each node to the (interleaved) root pages
+    root_dist = node_dist[:, list(root_data_nodes)].mean(axis=1)
+
+    depth_first = scheduler != "bf"
+    # Victim orders. DFWSPT's list is static; DFWSRPT re-randomizes ties
+    # (equal-distance victims) per sweep; stock cilk/wf sweep victims in a
+    # fresh random order. Distance groups are precomputed once.
+    pri_orders = None
+    dist_groups: list[list[list[int]]] = []
+    for th in range(T):
+        by_d: dict[int, list[int]] = {}
+        for v in range(T):
+            if v != th:
+                by_d.setdefault(int(dist[cores[th], cores[v]]), []).append(v)
+        dist_groups.append([by_d[d] for d in sorted(by_d)])
+    if scheduler == "dfwspt":
+        pri_orders = [victim_order(topo, cores, t, "dfwspt", rng) for t in range(T)]
+    all_others = [[v for v in range(T) if v != th] for th in range(T)]
+
+    # --- state ---
+    local: list[list[_Run]] = [[] for _ in range(T)]  # deque per thread
+    shared: list[_Run] = []                            # bf FIFO
+    shared_lock = _Serialized(p.lock_time)
+    deque_locks = [_Serialized(p.deque_lock_time) for _ in range(T)]
+    parked: set[int] = set()
+    events: list[tuple[float, int, int, Optional[_Run]]] = []  # (t, seq, thread, task-to-run)
+    seq = 0
+    stats = dict(steals=0, failed=0, remote=0.0, total_exec=0.0)
+    live_tasks = 1  # root
+    makespan = 0.0
+
+    def push_event(t: float, thread: int, task: Optional[_Run]):
+        nonlocal seq
+        seq += 1
+        heapq.heappush(events, (t, seq, thread, task))
+
+    def exec_cost(run: _Run, core: int, work: float) -> float:
+        d_root = root_dist[core_node[core]]
+        d_par = (node_dist[core_node[core], run.parent_node]
+                 if run.parent_node >= 0 else 0)
+        s = run.spec
+        penalty = workload.mem_intensity * p.hop_lambda * (
+            s.f_root * d_root + s.f_parent * d_par)
+        stats["remote"] += work * penalty
+        stats["total_exec"] += work * (1.0 + penalty)
+        return work * (1.0 + penalty)
+
+    def qop(thread: int) -> float:
+        """Local task-pool op cost; remote if runtime data is centralized
+        (baseline Nanos first-touch — the paper's §IV-end fix removes it)."""
+        if runtime_data_node is None:
+            return p.qop_time
+        d = node_dist[core_node[cores[thread]], runtime_data_node]
+        return p.qop_time * (1.0 + p.hop_lambda_steal * d)
+
+    def deque_home_dist(thief: int, victim: int) -> float:
+        """Hop distance from thief to the victim's pool metadata."""
+        if runtime_data_node is None:
+            return float(dist[cores[thief], cores[victim]])
+        return float(node_dist[core_node[cores[thief]], runtime_data_node])
+
+    def enqueue(run: _Run, thread: int, t: float) -> float:
+        """Push a ready task; wake parked threads. Returns time after op."""
+        if depth_first:
+            t += qop(thread)
+            local[thread].append(run)  # front == end of list (LIFO pop)
+        else:
+            t = shared_lock.acquire(t)
+            shared.append(run)
+        wake(t)
+        return t
+
+    def wake(t: float):
+        # wake-one (Nanos-style): a single push readies a single sleeper.
+        if parked:
+            th = parked.pop()
+            push_event(t + p.wake_latency, th, None)
+
+    def try_acquire(thread: int, t: float) -> tuple[Optional[_Run], float]:
+        """Scheduler-policy task acquisition. May advance time."""
+        if depth_first:
+            if local[thread]:
+                return local[thread].pop(), t + qop(thread)
+            # steal sweep
+            if scheduler in ("cilk", "wf"):
+                order = list(all_others[thread])
+                rng.shuffle(order)
+            elif scheduler == "dfwspt":
+                order = pri_orders[thread]
+            else:  # dfwsrpt: re-randomize equal-distance ties each sweep
+                order = []
+                for group in dist_groups[thread]:
+                    g = list(group)
+                    rng.shuffle(g)
+                    order.extend(g)
+            for v in order:
+                t += p.steal_time * (1.0 + p.hop_lambda_steal
+                                     * deque_home_dist(thread, v))
+                if local[v]:
+                    t = deque_locks[v].acquire(t)
+                    if local[v]:
+                        stats["steals"] += 1
+                        return local[v].pop(0), t  # steal from the back
+                stats["failed"] += 1
+            return None, t
+        # breadth-first: single shared FIFO behind one lock.
+        # Peek without the lock first (cheap read) — contention comes from
+        # genuine concurrent pops, not from idle polling.
+        if not shared:
+            return None, t
+        t = shared_lock.acquire(t)
+        if shared:
+            return shared.pop(0), t
+        return None, t
+
+    def complete_subtree(run: _Run, thread: int, t: float) -> float:
+        """Propagate completion: spawn post waves / run join continuations."""
+        nonlocal live_tasks
+        node = run
+        while True:
+            parent = node.parent
+            if parent is None:
+                return t
+            parent.pending -= 1
+            if parent.pending > 0:
+                return t
+            if parent.phase == 0 and parent.spec.post_children:
+                # taskwait passed → spawn the parallel combine wave on the
+                # thread that completed the last child (depth-first: it
+                # has the hottest caches for the join data).
+                parent.phase = 1
+                kids = parent.spec.post_children
+                parent.pending = len(kids)
+                live_tasks += len(kids)
+                t += p.spawn_time * len(kids)
+                for k in kids[::-1]:
+                    t = enqueue(_Run(k, parent, parent.exec_node), thread, t)
+                return t
+            # all waves done → run parent's continuation (work_post)
+            if parent.spec.work_post > 0.0:
+                cont = _Run(parent.spec, None, parent.exec_node)
+                # continuation resumes with parent's own locality profile;
+                # completion then propagates to the grandparent.
+                cont_cost = exec_cost(cont, cores[thread], parent.spec.work_post)
+                t += cont_cost
+            node = parent
+
+    def run_task(run: _Run, thread: int, t: float):
+        nonlocal live_tasks, makespan
+        if migration_rate > 0.0 and rng.random_sample() < migration_rate:
+            # unbound baseline: OS moves the thread; caches refill cold.
+            cores[thread] = int(rng.randint(topo.num_cores))
+            t += p.cache_refill
+        core = cores[thread]
+        run.exec_node = int(core_node[core])  # first touch of its temporaries
+        t += exec_cost(run, core, run.spec.work_pre)
+        kids = run.spec.children
+        if kids:
+            run.pending = len(kids)
+            live_tasks += len(kids)
+            runs = [_Run(k, run, run.exec_node) for k in kids]
+            if scheduler == "wf" or scheduler in ("dfwspt", "dfwsrpt"):
+                # work-first: dive into the first child immediately,
+                # queue the rest (newest in front).
+                t += p.spawn_time * len(kids)
+                for r in runs[1:][::-1]:
+                    t = enqueue(r, thread, t)
+                push_event(t, thread, runs[0])
+                return
+            t += p.spawn_time * len(kids)
+            for r in runs[::-1] if depth_first else runs:
+                t = enqueue(r, thread, t)
+            # cilk-based: continue by popping own deque front (the first
+            # child) — one queue round-trip more than work-first.
+            push_event(t, thread, None)
+            return
+        # leaf (or no children): join propagation
+        live_tasks -= 1
+        t = complete_subtree(run, thread, t)
+        makespan = max(makespan, t)
+        push_event(t, thread, None)
+
+    # ignite: master (thread 0) starts the root
+    root_run = _Run(workload.root, None, int(root_data_nodes[0]))
+    push_event(0.0, 0, root_run)
+    for th in range(1, T):
+        push_event(0.0, th, None)
+
+    while events:
+        t, _, thread, task = heapq.heappop(events)
+        if task is not None:
+            run_task(task, thread, t)
+            continue
+        got, t2 = try_acquire(thread, t)
+        if got is not None:
+            run_task(got, thread, t2)
+        elif live_tasks > 0:
+            parked.add(thread)  # woken by the next enqueue
+        # else: drain — nothing left anywhere.
+
+    # serial reference: one thread on the master core, same data placement.
+    if serial_reference is not None:
+        serial = serial_reference
+    else:
+        serial = serial_time(topo, workload, cores[0], root_data_nodes, p)
+    rf = stats["remote"] / max(stats["total_exec"], 1e-12)
+    return SimResult(
+        makespan=makespan,
+        serial_time=serial,
+        speedup=serial / makespan if makespan > 0 else float("nan"),
+        tasks=workload.root.count(),
+        steals=stats["steals"],
+        failed_probes=stats["failed"],
+        remote_work_fraction=rf,
+        queue_wait=shared_lock.waited,
+    )

@@ -1,0 +1,73 @@
+"""NUMA-aware work-stealing victim orders (paper §VI).
+
+Both of the paper's schedulers steal from victims ranked by hop distance
+from the idle thread's core; they differ only in tie-breaking at equal
+distance:
+
+  * DFWSPT  — ties broken by ascending thread id ("threads with smaller
+    id are placed first").
+  * DFWSRPT — ties broken by a fresh random permutation each time the
+    thread goes stealing ("victim thread is picked randomly" among the
+    equally-close), which avoids convoys on the lowest-id victim.
+
+``priority_list`` builds the static DFWSPT list; ``victim_order`` yields
+the per-attempt order for either policy. The same orders drive the MoE
+overflow re-routing in :mod:`repro.core.routing` (the TPU adaptation),
+where "threads" are expert-owning devices.
+"""
+
+from __future__ import annotations
+
+from typing import Iterator, Sequence
+
+import numpy as np
+
+from .topology import Topology
+
+__all__ = ["priority_list", "victim_order", "steal_order_matrix"]
+
+
+def priority_list(topo: Topology, thread_cores: Sequence[int],
+                  thread: int) -> list[int]:
+    """DFWSPT static priority list for ``thread``.
+
+    Returns other threads' ids ordered by (hop distance from this thread's
+    core asc, thread id asc). This is computed once at startup, exactly as
+    the paper prescribes.
+    """
+    me = thread_cores[thread]
+    dist = topo.core_distance_matrix()
+    others = [t for t in range(len(thread_cores)) if t != thread]
+    return sorted(others, key=lambda t: (dist[me, thread_cores[t]], t))
+
+
+def victim_order(topo: Topology, thread_cores: Sequence[int], thread: int,
+                 policy: str, rng: np.random.RandomState) -> list[int]:
+    """Victim id order for one stealing sweep.
+
+    policy: 'dfwspt' (deterministic ties) or 'dfwsrpt' (random ties).
+    """
+    me = thread_cores[thread]
+    dist = topo.core_distance_matrix()
+    others = [t for t in range(len(thread_cores)) if t != thread]
+    if policy == "dfwspt":
+        return sorted(others, key=lambda t: (dist[me, thread_cores[t]], t))
+    if policy == "dfwsrpt":
+        jitter = rng.permutation(len(thread_cores))
+        return sorted(others, key=lambda t: (dist[me, thread_cores[t]], jitter[t]))
+    raise ValueError(f"unknown stealing policy {policy!r}")
+
+
+def steal_order_matrix(topo: Topology, thread_cores: Sequence[int],
+                       policy: str = "dfwspt",
+                       seed: int = 0) -> np.ndarray:
+    """(T, T-1) matrix: row t = victim order for thread t.
+
+    For 'dfwsrpt' the random tie-break is drawn once per row from ``seed``
+    — this is the *ahead-of-time* form used by the TPU routing adaptation,
+    where the steal order must be baked into the compiled program.
+    """
+    rng = np.random.RandomState(seed)
+    rows = [victim_order(topo, thread_cores, t, policy, rng)
+            for t in range(len(thread_cores))]
+    return np.asarray(rows, np.int64)

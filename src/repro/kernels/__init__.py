@@ -1,0 +1,6 @@
+"""Pallas TPU kernels: flash attention, SSD scan, MoE grouped GEMM,
+RMSNorm. Public API in ops.py; oracles in ref.py."""
+
+from .ops import flash_attention, moe_gmm, rmsnorm, ssd_scan
+
+__all__ = ["flash_attention", "moe_gmm", "rmsnorm", "ssd_scan"]

@@ -1,0 +1,189 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the semantics of record: kernels must match them (see
+tests/test_kernels.py sweeps), and training uses them for backward passes
+(ops.py wires kernels forward + ref-VJP backward).
+
+Layouts:
+  attention  — BSHD: q (B, S, Hq, D), k/v (B, S, Hkv, D), GQA via repeat.
+  ssd        — x (B, S, H, P), a (B, S, H) log-decay, B/C (B, S, G, N).
+  moe_gmm    — x (E, C, D), w (E, D, F).
+  rmsnorm    — x (..., D), w (D,).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["rmsnorm_ref", "attention_ref", "attention_chunked_ref",
+           "ssd_ref", "ssd_chunked_ref", "moe_gmm_ref"]
+
+
+def rmsnorm_ref(x: jnp.ndarray, w: jnp.ndarray,
+                eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(ms + eps) * w.astype(jnp.float32)).astype(x.dtype)
+
+
+def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                  causal: bool = True,
+                  scale: float | None = None,
+                  window: int | None = None,
+                  kv_offset: int = 0) -> jnp.ndarray:
+    """Multi-head attention with GQA, causal/bidirectional, sliding window.
+
+    q: (B, Sq, Hq, D); k, v: (B, Skv, Hkv, D) with Hq % Hkv == 0.
+    kv_offset: absolute position of q[0] minus that of k[0] (decode: the
+    query sits at position ``kv_offset`` within the cache).
+    """
+    B, Sq, Hq, D = q.shape
+    _, Skv, Hkv, _ = k.shape
+    if Hq % Hkv:
+        raise ValueError(f"Hq={Hq} not a multiple of Hkv={Hkv}")
+    group = Hq // Hkv
+    scale = (D ** -0.5) if scale is None else scale
+    kr = jnp.repeat(k, group, axis=2)
+    vr = jnp.repeat(v, group, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   kr.astype(jnp.float32)) * scale
+    qpos = jnp.arange(Sq)[:, None] + kv_offset
+    kpos = jnp.arange(Skv)[None, :]
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask[None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, vr.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def attention_chunked_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                          causal: bool = True,
+                          scale: float | None = None,
+                          window: int | None = None,
+                          kv_offset: int = 0,
+                          chunk: int = 1024) -> jnp.ndarray:
+    """Memory-bounded attention: scan over query chunks.
+
+    Same semantics as :func:`attention_ref`, but the (Sq × Skv) score
+    matrix never materializes beyond one (chunk × Skv) f32 slab — the
+    long-sequence prefill path (32k/500k cells) on any backend.
+    """
+    B, S, H, D = q.shape
+    if S % chunk:
+        return attention_ref(q, k, v, causal=causal, scale=scale,
+                             window=window, kv_offset=kv_offset)
+    nc = S // chunk
+    qs = jnp.moveaxis(q.reshape(B, nc, chunk, H, D), 1, 0)
+
+    def f(_, inp):
+        i, qc = inp
+        o = attention_ref(qc, k, v, causal=causal, scale=scale,
+                          window=window, kv_offset=kv_offset + i * chunk)
+        return None, o
+
+    _, outs = jax.lax.scan(f, None, (jnp.arange(nc), qs))
+    return jnp.moveaxis(outs, 0, 1).reshape(B, S, H, D)
+
+
+def ssd_ref(x: jnp.ndarray, a: jnp.ndarray, b: jnp.ndarray, c: jnp.ndarray,
+            h0: jnp.ndarray | None = None,
+            return_state: bool = False):
+    """Mamba2 SSD (state-space dual) semantics via the sequential scan.
+
+    x: (B, S, H, P) inputs (already multiplied by dt).
+    a: (B, S, H) per-head log decay (a = -exp(A_log)·dt, ≤ 0).
+    b, c: (B, S, G, N) input/output projections, G groups (H % G == 0).
+    h0: optional initial state (B, H, N, P).
+
+    h_t = exp(a_t)·h_{t-1} + B_t ⊗ x_t ;  y_t = C_t · h_t
+    """
+    B, S, H, P = x.shape
+    _, _, G, N = b.shape
+    if H % G:
+        raise ValueError(f"H={H} not a multiple of G={G}")
+    rep = H // G
+    bb = jnp.repeat(b, rep, axis=2).astype(jnp.float32)   # (B,S,H,N)
+    cc = jnp.repeat(c, rep, axis=2).astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    af = a.astype(jnp.float32)
+    if h0 is None:
+        h0 = jnp.zeros((B, H, N, P), jnp.float32)
+
+    def step(h, inp):
+        xt, at, bt, ct = inp          # (B,H,P), (B,H), (B,H,N), (B,H,N)
+        h = jnp.exp(at)[..., None, None] * h + bt[..., None] * xt[..., None, :]
+        y = jnp.einsum("bhn,bhnp->bhp", ct, h)
+        return h, y
+
+    hT, ys = jax.lax.scan(
+        step, h0.astype(jnp.float32),
+        (xf.transpose(1, 0, 2, 3), af.transpose(1, 0, 2),
+         bb.transpose(1, 0, 2, 3), cc.transpose(1, 0, 2, 3)))
+    y = ys.transpose(1, 0, 2, 3).astype(x.dtype)          # (B,S,H,P)
+    if return_state:
+        return y, hT
+    return y
+
+
+def moe_gmm_ref(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Grouped expert GEMM: x (E, C, D) @ w (E, D, F) -> (E, C, F)."""
+    return jnp.einsum("ecd,edf->ecf", x.astype(jnp.float32),
+                      w.astype(jnp.float32)).astype(x.dtype)
+
+
+def ssd_chunked_ref(x: jnp.ndarray, a: jnp.ndarray, b: jnp.ndarray,
+                    c: jnp.ndarray,
+                    h0: jnp.ndarray | None = None,
+                    chunk: int = 128,
+                    return_state: bool = False):
+    """Chunked (dual-form) SSD — same semantics as :func:`ssd_ref`, but
+    MXU-shaped: dense intra-chunk matmuls + a scan over S/chunk chunk
+    states. This is the pure-jnp mirror of the Pallas kernel's math and
+    the training/prefill path of the Mamba2 layers (the sequential scan
+    would put S serialized steps in the HLO)."""
+    B, S, H, P = x.shape
+    _, _, G, N = b.shape
+    if S % chunk or S == 0:
+        return ssd_ref(x, a, b, c, h0=h0, return_state=return_state)
+    rep = H // G
+    L = chunk
+    nc = S // L
+    bb = jnp.repeat(b, rep, axis=2).astype(jnp.float32)
+    cc = jnp.repeat(c, rep, axis=2).astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    af = a.astype(jnp.float32)
+    if h0 is None:
+        h0 = jnp.zeros((B, H, N, P), jnp.float32)
+
+    def chunk_f(h, inp):
+        xc, ac, bc, cx = inp               # (B,L,H,P) (B,L,H) (B,L,H,N) ×2
+        acum = jnp.cumsum(ac, axis=1)      # inclusive
+        a_tot = acum[:, -1]                # (B,H)
+        y_inter = jnp.exp(acum)[..., None] * jnp.einsum(
+            "blhn,bhnp->blhp", cx, h)
+        logdecay = acum[:, :, None, :] - acum[:, None, :, :]   # (B,L,L,H)
+        tri = (jnp.arange(L)[:, None] >= jnp.arange(L)[None, :])
+        # mask BEFORE exp: the upper triangle holds positive values whose
+        # exp overflows; inf·0 in the backward would produce NaN grads.
+        decay = jnp.exp(jnp.where(tri[None, :, :, None], logdecay, -jnp.inf))
+        scores = jnp.einsum("blhn,bmhn->blmh", cx, bc) * decay
+        y = y_inter + jnp.einsum("blmh,bmhp->blhp", scores, xc)
+        w = jnp.exp(a_tot[:, None] - acum)[..., None] * bc     # (B,L,H,N)
+        h = jnp.exp(a_tot)[..., None, None] * h + jnp.einsum(
+            "blhn,blhp->bhnp", w, xc)
+        return h, y
+
+    resh = lambda t: jnp.moveaxis(
+        t.reshape((B, nc, L) + t.shape[2:]), 1, 0)
+    hT, ys = jax.lax.scan(
+        chunk_f, h0.astype(jnp.float32),
+        (resh(xf), resh(af), resh(bb), resh(cc)))
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, S, H, P).astype(x.dtype)
+    if return_state:
+        return y, hT
+    return y

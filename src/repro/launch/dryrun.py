@@ -1,0 +1,494 @@
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+Proves the distribution config is coherent without hardware: for each
+cell we build the jitted step (train / prefill / decode) over
+ShapeDtypeStructs (no allocation), ``.lower().compile()`` against the
+production mesh, and record ``memory_analysis`` / ``cost_analysis`` /
+the collective schedule parsed from the compiled HLO into
+``artifacts/dryrun/<cell>.json`` — the §Roofline inputs.
+
+Run:
+    PYTHONPATH=src python -m repro.launch.dryrun --all
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-14b \
+        --shape train_4k --mesh multi
+"""
+
+# The dry-run (and ONLY the dry-run) needs 512 placeholder devices —
+# before ANY other import, since jax locks the device count on first init.
+import os  # noqa: E402
+
+if not os.environ.get("REPRO_DRYRUN_NO_FAKE_DEVICES"):
+    os.environ["XLA_FLAGS"] = (
+        "--xla_force_host_platform_device_count=512 "
+        + os.environ.get("XLA_FLAGS", ""))
+
+import argparse      # noqa: E402
+import dataclasses   # noqa: E402
+import json          # noqa: E402
+import re            # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+
+import jax           # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np   # noqa: E402
+
+from repro import configs                     # noqa: E402
+from repro.models import model as model_lib   # noqa: E402
+from repro.models import stack as stack_lib   # noqa: E402
+from repro.optim import AdamWConfig, adamw_init, adamw_update  # noqa: E402
+from repro.launch import shardings as shd     # noqa: E402
+from repro.launch.mesh import make_production_mesh, mesh_steal_table  # noqa: E402
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                         "artifacts", "dryrun")
+
+# Desired gradient-accumulation microbatches per arch (train_4k): bounds
+# the scan-carried activation memory (per-device bytes ≈ R·rows·S·D·2 /
+# microbatches). Clamped to the DP shard count at mesh time.
+# archs whose optimizer runs in factored (Adafactor-v + bf16-m) mode to
+# fit 16 GB/chip — production practice for ≥100B params on v5e.
+FACTORED_OPT = {"jamba-1.5-large-398b", "llama-3.2-vision-90b",
+                "llama4-scout-17b-a16e", "command-r-35b"}
+
+MICRO_WANTED = {
+    "llama-3.2-vision-90b": 16,
+    "command-r-35b": 16,
+    "jamba-1.5-large-398b": 16,
+    "llama4-scout-17b-a16e": 8,
+    "qwen3-14b": 16,
+    "qwen2.5-3b": 4,
+    "stablelm-1.6b": 4,
+    "granite-moe-1b-a400m": 4,
+    "hubert-xlarge": 4,
+    "mamba2-1.3b": 4,
+}
+
+
+def cell_id(arch: str, shape: str, mesh_kind: str) -> str:
+    return f"{arch}__{shape}__{mesh_kind}"
+
+
+def num_microbatches(arch: str, shape_spec, mesh) -> int:
+    if shape_spec.kind != "train":
+        return 1
+    dp = int(np.prod([mesh.shape[a] for a in ("pod", "data")
+                      if a in mesh.axis_names]))
+    return max(1, min(MICRO_WANTED.get(arch, 4),
+                      shape_spec.global_batch // dp))
+
+
+def adapt_config(cfg, shape_spec, mesh, micro: int = 1):
+    """Mesh-dependent config adjustments (the launcher's job).
+
+    * kv_repeat (GQA TP replication) only when the replicated head count
+      both divides the query heads (attention math) and is divisible by
+      the model axis (sharding math): e.g. command-r 64H/8kv → ×2 = 16
+      stored; qwen3 40H/8kv can't (16 ∤ 40) → its KV activations/cache
+      fall back to sequence-sharding (flash-decoding style).
+    * activation sharding constraints are derived here with divisibility
+      fit against the cell's concrete shapes.
+    """
+    from repro.launch import shardings as _shd
+
+    model_axis = mesh.shape["model"]
+    ba = _shd.batch_axes(mesh)
+    updates: dict = {}
+    kv = cfg.num_kv_heads
+    rep = 1
+    if (cfg.num_heads > 1 and kv < model_axis and model_axis % kv == 0):
+        r = model_axis // kv
+        if cfg.num_heads % (kv * r) == 0:
+            rep = r
+            updates["kv_repeat"] = rep
+    stored = kv * rep
+
+    rows = shape_spec.global_batch
+    if shape_spec.kind == "train":
+        rows = max(1, shape_spec.global_batch // micro)
+    S = 1 if shape_spec.kind == "decode" else shape_spec.seq_len
+    Skv = shape_spec.seq_len if shape_spec.kind == "decode" else S
+
+    def fit(shape, *spec):
+        p = _shd.fit_spec(mesh, shape, _shd.P(*spec))
+        entries = tuple(p) + (None,) * (len(shape) - len(tuple(p)))
+        return entries if any(e is not None for e in entries) else None
+
+    if cfg.num_heads > 1:
+        updates["attn_q_spec"] = fit(
+            (rows, S, cfg.num_heads, cfg.head_dim), ba, None, "model")
+        if stored % model_axis == 0:
+            updates["attn_kv_spec"] = fit(
+                (rows, Skv, stored, cfg.head_dim), ba, None, "model")
+        else:
+            # sequence-sharded KV (flash-decoding / context parallel)
+            updates["attn_kv_spec"] = fit(
+                (rows, Skv, stored, cfg.head_dim), ba, "model", None)
+    if cfg.ssm_state:
+        d_inner = cfg.ssm_expand * cfg.d_model
+        H = d_inner // cfg.ssm_head_dim
+        updates["ssm_act_spec"] = fit(
+            (rows, S, H, cfg.ssm_head_dim), ba, None, "model")
+    if cfg.moe_num_experts:
+        T = rows * S
+        G = min(cfg.moe_group, T)
+        updates["moe_group_spec"] = fit((T // G, G, cfg.d_model),
+                                        ba, None, None)
+        cap = int(np.ceil(G * cfg.moe_top_k * cfg.capacity_factor
+                          / cfg.moe_num_experts))
+        ff = cfg.moe_d_ff or cfg.d_ff
+        # groups ride the DP axes, experts the model axis
+        updates["moe_xin_spec"] = fit(
+            (T // G, cfg.moe_num_experts, cap, cfg.d_model),
+            ba, "model", None, None)
+        updates["moe_h_spec"] = fit(
+            (T // G, cfg.moe_num_experts, cap, ff),
+            ba, "model", None, None)
+    if shape_spec.kind == "train":
+        updates["remat"] = "full"
+        if len(cfg.pattern) > 1:
+            updates["serialize_slot_gathers"] = True
+    return dataclasses.replace(cfg, **updates)
+
+
+# ----------------------------------------------------------------------
+# step builders (abstract inputs)
+# ----------------------------------------------------------------------
+
+def batch_struct(cfg, shape_spec):
+    B, S = shape_spec.global_batch, shape_spec.seq_len
+    b = {"labels": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+    if cfg.embeds_input:
+        b["embeds"] = jax.ShapeDtypeStruct((B, S, cfg.d_model),
+                                           cfg.param_dtype)
+    else:
+        b["tokens"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    if cfg.num_media_tokens:
+        b["media"] = jax.ShapeDtypeStruct(
+            (B, cfg.num_media_tokens, cfg.d_model), cfg.param_dtype)
+    return b
+
+
+def input_specs(arch: str, shape: str):
+    """ShapeDtypeStruct stand-ins for every model input of a cell."""
+    cfg = configs.get(arch)
+    spec = configs.SHAPES[shape]
+    if spec.kind == "train":
+        return batch_struct(cfg, spec)
+    if spec.kind == "prefill":
+        return batch_struct(cfg, spec)
+    # decode: one new token against a seq_len cache
+    return {"tokens": jax.ShapeDtypeStruct((spec.global_batch, 1),
+                                           jnp.int32)}
+
+
+def make_train_step(cfg, opt_cfg: AdamWConfig, num_micro: int,
+                    steal_table):
+    acc_dtype = "bfloat16" if opt_cfg.factored else None
+
+    def train_step(params, opt_state, batch):
+        from repro.optim import accumulate_gradients
+        loss, grads, _ = accumulate_gradients(
+            lambda p, b: model_lib.train_loss(p, cfg, b,
+                                              steal_table=steal_table),
+            params, batch, num_micro, acc_dtype=acc_dtype)
+        params, opt_state, metrics = adamw_update(
+            grads, opt_state, params, opt_cfg)
+        return params, opt_state, loss, metrics["grad_norm"]
+    return train_step
+
+
+def make_prefill_step(cfg, steal_table):
+    def prefill_step(params, batch):
+        if cfg.is_encoder:
+            logits, _ = model_lib.forward(
+                params, cfg, tokens=batch.get("tokens"),
+                embeds=batch.get("embeds"), media=batch.get("media"),
+                steal_table=steal_table)
+            return logits[:, -1]
+        logits, caches = model_lib.prefill(
+            params, cfg, tokens=batch.get("tokens"),
+            embeds=batch.get("embeds"), media=batch.get("media"),
+            steal_table=steal_table)
+        return logits, caches["length"]
+    return prefill_step
+
+
+def make_decode_step(cfg, steal_table):
+    def decode_step(params, caches, tokens):
+        logits, caches = model_lib.decode_step(params, cfg, caches, tokens,
+                                               steal_table=steal_table)
+        return logits, caches
+    return decode_step
+
+
+def abstract_caches(cfg, batch: int, max_len: int):
+    sds = jax.eval_shape(
+        lambda: stack_lib.init_caches(cfg, batch, max_len, cfg.param_dtype))
+    # decode starts with a full cache: length is a traced scalar anyway
+    return sds
+
+
+# ----------------------------------------------------------------------
+# collective parsing (HLO text → bytes moved per collective kind)
+# ----------------------------------------------------------------------
+
+_COLL_RE = re.compile(
+    r"(\w[\w.\-]*)\s*=\s*(\([^)]*\)|\S+)\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(", re.I)
+_SHAPE_RE = re.compile(r"(bf16|f32|f16|s32|u32|s8|u8|f64|pred|s64|u64)"
+                       r"\[([\d,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{(.*?)\}\}|replica_groups=\[")
+
+_BYTES = {"bf16": 2, "f16": 2, "f32": 4, "f64": 8, "s32": 4, "u32": 4,
+          "s8": 1, "u8": 1, "pred": 1, "s64": 8, "u64": 8}
+
+
+def _group_size(line: str) -> tuple[int, bool]:
+    """(collective group size, crosses-pod?) from an HLO line."""
+    gm = re.search(r"replica_groups=\{\{([^}]*)\}", line)
+    if gm:
+        ids = [int(x) for x in gm.group(1).split(",") if x.strip()]
+        cross = bool(ids) and (max(ids) // 256) != (min(ids) // 256)
+        return max(len(ids), 1), cross
+    # iota form: replica_groups=[G,S]<=[...] (optionally T(perm)):
+    # G groups of size S; contiguous groups cross the pod boundary only
+    # when S > 256, transposed ones stride across pods whenever the
+    # total spans both pods.
+    gm = re.search(r"replica_groups=\[(\d+),(\d+)\]<=\[([\dx,]+)\]"
+                   r"(T\([\d,]+\))?", line)
+    if gm:
+        g, su = int(gm.group(1)), int(gm.group(2))
+        total = g * su
+        if gm.group(4):
+            cross = total > 256 and su > 1
+        else:
+            cross = su > 256
+        return su, cross
+    return 1, False
+
+
+def parse_collectives(hlo: str) -> dict:
+    """Collective schedule from the compiled (per-partition) module.
+
+    Records result-shape bytes, estimated per-device wire bytes (ring
+    algorithms: all-gather ≈ R·(g−1)/g, all-reduce ≈ 2·R·(g−1)/g,
+    reduce-scatter ≈ R·(g−1) with R the scattered result, all-to-all /
+    permute ≈ R), and the share crossing the pod boundary (DCI).
+    """
+    out: dict[str, dict] = {}
+    for line in hlo.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        kind = m.group(3).lower()
+        result_part = line.split("=", 1)[1] if "=" in line else line
+        head = result_part.split(kind, 1)[0]
+        nbytes = 0
+        for dm in _SHAPE_RE.finditer(head):
+            dt, dims = dm.group(1), dm.group(2)
+            n = 1
+            if dims:
+                for d in dims.split(","):
+                    if d:
+                        n *= int(d)
+            nbytes += n * _BYTES.get(dt, 4)
+        g, cross_pod = _group_size(line)
+        if kind == "all-reduce":
+            wire = 2 * nbytes * max(g - 1, 0) // max(g, 1)
+        elif kind == "all-gather":
+            wire = nbytes * max(g - 1, 0) // max(g, 1)
+        elif kind == "reduce-scatter":
+            wire = nbytes * max(g - 1, 1)
+        else:  # all-to-all, collective-permute
+            wire = nbytes
+        rec = out.setdefault(kind, dict(count=0, bytes=0, wire_bytes=0,
+                                        cross_pod_bytes=0,
+                                        cross_pod_wire_bytes=0))
+        rec["count"] += 1
+        rec["bytes"] += nbytes
+        rec["wire_bytes"] += wire
+        if cross_pod:
+            rec["cross_pod_bytes"] += nbytes
+            rec["cross_pod_wire_bytes"] += wire
+    return out
+
+
+# ----------------------------------------------------------------------
+# cell runner
+# ----------------------------------------------------------------------
+
+def run_cell(arch: str, shape: str, mesh_kind: str,
+             skip_existing: bool = True, verbose: bool = True,
+             variant: str | None = None,
+             cfg_overrides: dict | None = None,
+             micro_override: int | None = None,
+             opt_overrides: dict | None = None,
+             out_dir: str | None = None) -> dict:
+    """Lower+compile one cell. ``variant``/overrides support the §Perf
+    hillclimb loop: config fields are replaced *after* mesh adaptation,
+    results land in ``out_dir`` (default: the dry-run artifact tree)."""
+    art = out_dir or ARTIFACTS
+    os.makedirs(art, exist_ok=True)
+    name = cell_id(arch, shape, mesh_kind) + (f"__{variant}" if variant
+                                              else "")
+    path = os.path.join(art, name + ".json")
+    if skip_existing and os.path.exists(path):
+        with open(path) as f:
+            return json.load(f)
+
+    cfg0 = configs.get(arch)
+    spec = configs.SHAPES[shape]
+    if shape not in cfg0.shapes():
+        rec = dict(arch=arch, shape=shape, mesh=mesh_kind, status="skipped",
+                   reason=cfg0.skipped_shapes().get(shape, "n/a"))
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+        return rec
+
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    n_micro = micro_override or num_microbatches(arch, spec, mesh)
+    cfg = adapt_config(cfg0, spec, mesh, micro=n_micro)
+    if cfg_overrides:
+        cfg = dataclasses.replace(cfg, **cfg_overrides)
+    steal = None
+    if cfg.moe_num_experts:
+        steal = mesh_steal_table(mesh, cfg.moe_num_experts,
+                                 cfg.moe_steal_policy)
+
+    params_sds = model_lib.abstract_params(cfg)
+    p_shard = shd.param_shardings(mesh, params_sds, cfg.sharding_profile)
+
+    try:
+        with mesh:
+            if spec.kind == "train":
+                opt_cfg = AdamWConfig(
+                    factored=arch in FACTORED_OPT,
+                    m_dtype="bfloat16" if arch in FACTORED_OPT
+                    else "float32")
+                if opt_overrides:
+                    opt_cfg = dataclasses.replace(opt_cfg, **opt_overrides)
+                opt_sds = jax.eval_shape(
+                    lambda p: adamw_init(p, opt_cfg), params_sds)
+                o_shard = shd.opt_state_shardings(mesh, opt_sds, p_shard)
+                batch_sds = batch_struct(cfg, spec)
+                b_shard = shd.batch_shardings(mesh, batch_sds)
+                step = make_train_step(cfg, opt_cfg, n_micro, steal)
+                lowered = jax.jit(
+                    step,
+                    in_shardings=(p_shard, o_shard, b_shard),
+                    out_shardings=(p_shard, o_shard, None, None),
+                    donate_argnums=(0, 1),
+                ).lower(params_sds, opt_sds, batch_sds)
+            elif spec.kind == "prefill":
+                batch_sds = batch_struct(cfg, spec)
+                b_shard = shd.batch_shardings(mesh, batch_sds)
+                step = make_prefill_step(cfg, steal)
+                lowered = jax.jit(
+                    step, in_shardings=(p_shard, b_shard),
+                ).lower(params_sds, batch_sds)
+            else:  # decode
+                caches_sds = abstract_caches(cfg, spec.global_batch,
+                                             spec.seq_len)
+                c_shard = shd.cache_shardings(mesh, caches_sds)
+                tok_sds = jax.ShapeDtypeStruct((spec.global_batch, 1),
+                                               jnp.int32)
+                step = make_decode_step(cfg, steal)
+                lowered = jax.jit(
+                    step,
+                    in_shardings=(p_shard, c_shard, None),
+                    out_shardings=(None, c_shard),
+                    donate_argnums=(1,),
+                ).lower(params_sds, caches_sds, tok_sds)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+    except Exception as e:  # record the failure for triage, then re-raise
+        rec = dict(arch=arch, shape=shape, mesh=mesh_kind, status="error",
+                   error=f"{type(e).__name__}: {e}",
+                   trace=traceback.format_exc()[-4000:])
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+        raise
+
+    ma = compiled.memory_analysis()
+    ca = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+    colls = parse_collectives(hlo)
+
+    rec = dict(
+        arch=arch, shape=shape, mesh=mesh_kind, status="ok",
+        variant=variant,
+        cfg_overrides={k: (list(v) if isinstance(v, tuple) else v)
+                       for k, v in (cfg_overrides or {}).items()
+                       if not k.endswith("_spec")},
+        opt=({**dict(factored=arch in FACTORED_OPT),
+              **(opt_overrides or {})} if spec.kind == "train" else None),
+        grad_acc_dtype=("bfloat16" if (arch in FACTORED_OPT or
+                                       (opt_overrides or {}).get("factored"))
+                        else "float32") if spec.kind == "train" else None,
+        mesh_shape=list(np.asarray(mesh.devices).shape),
+        num_devices=int(np.asarray(mesh.devices).size),
+        kind=spec.kind,
+        microbatches=n_micro,
+        lower_s=round(t_lower, 2), compile_s=round(t_compile, 2),
+        memory=dict(
+            argument_bytes=getattr(ma, "argument_size_in_bytes", None),
+            output_bytes=getattr(ma, "output_size_in_bytes", None),
+            temp_bytes=getattr(ma, "temp_size_in_bytes", None),
+            generated_code_bytes=getattr(ma, "generated_code_size_in_bytes",
+                                         None),
+        ),
+        cost=dict(
+            flops_per_device=ca.get("flops"),
+            transcendentals=ca.get("transcendentals"),
+            bytes_accessed_per_device=ca.get("bytes accessed"),
+        ),
+        collectives=colls,
+        param_count=model_lib.param_count(cfg),
+        active_param_count=model_lib.active_param_count(cfg),
+    )
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    if verbose:
+        mm = (rec["memory"]["argument_bytes"] or 0) + \
+            (rec["memory"]["temp_bytes"] or 0)
+        print(f"[dryrun] {name:56s} ok "
+              f"mem/dev={mm/2**30:6.2f}GiB "
+              f"flops/dev={rec['cost']['flops_per_device'] or 0:.3e} "
+              f"lower={t_lower:.1f}s compile={t_compile:.1f}s")
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default=None, choices=[None, "single", "multi"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else list(configs.ARCHS)
+    shapes = [args.shape] if args.shape else list(configs.SHAPES)
+    meshes = [args.mesh] if args.mesh else ["single", "multi"]
+
+    failures = []
+    for a in archs:
+        for s in shapes:
+            for m in meshes:
+                try:
+                    run_cell(a, s, m, skip_existing=not args.force)
+                except Exception as e:
+                    failures.append((a, s, m, str(e)))
+                    print(f"[dryrun] FAIL {a} {s} {m}: {e}")
+    if failures:
+        print(f"\n{len(failures)} cells failed")
+        raise SystemExit(1)
+    print("\nall requested cells lowered + compiled")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,252 @@
+"""PartitionSpec rules engine.
+
+Assigns NamedShardings to parameter/optimizer/cache/batch trees from
+tensor *roles* (inferred from tree paths and shapes) with divisibility
+checks and graceful fallback (drop the axis → replicate that dim), so
+every (arch × shape × mesh) cell lowers — a hard dry-run requirement.
+
+Strategy (2-D "data" × "model" per pod, +"pod" across pods):
+  * batch dims          → ("pod","data")  [DP]
+  * TP matrix dims      → "model" (attention heads / MLP hidden / vocab)
+  * FSDP: the non-TP matrix dim of every weight → "data"  [ZeRO-3; GSPMD
+    inserts the all-gathers at use sites]
+  * MoE expert dim      → "model" [EP]
+  * KV caches           → batch on ("pod","data"), stored heads on
+    "model" (kv_repeat pre-replicates heads when TP > kv heads)
+  * optimizer state     → like its parameter (m, v); scalars replicated
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+__all__ = ["batch_axes", "fit_spec", "param_specs", "param_shardings",
+           "batch_shardings", "cache_shardings", "opt_state_shardings",
+           "replicated", "scalar_spec"]
+
+
+def batch_axes(mesh) -> tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _axis_size(mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, (tuple, list)):
+        return int(np.prod([_axis_size(mesh, a) for a in axis]))
+    return mesh.shape[axis]
+
+
+def fit_spec(mesh, shape: tuple[int, ...], spec: P) -> P:
+    """Drop axes that don't divide their dim (replicate instead)."""
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    out = []
+    for dim, axis in zip(shape, entries):
+        if axis is None:
+            out.append(None)
+            continue
+        axes = axis if isinstance(axis, (tuple, list)) else (axis,)
+        kept: list[str] = []
+        for a in axes:
+            size = _axis_size(mesh, a)
+            cur = int(np.prod([_axis_size(mesh, k) for k in kept]) or 1)
+            if size > 1 and dim % (cur * size) == 0:
+                kept.append(a)
+        out.append(tuple(kept) if len(kept) > 1 else
+                   (kept[0] if kept else None))
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def replicated(mesh):
+    return NamedSharding(mesh, P())
+
+
+def scalar_spec(mesh):
+    return NamedSharding(mesh, P())
+
+
+# ----------------------------------------------------------------------
+# parameters
+# ----------------------------------------------------------------------
+
+def _role_spec(path_keys: list[str], shape: tuple[int, ...],
+               profile: str = "2d") -> P:
+    """Desired (pre-fallback) spec by role. Shapes may carry a leading
+    stacked-repeats dim (params under 'blocks') — caller strips it.
+
+    profile '2d'      — TP on "model" + FSDP on "data" (default).
+    profile 'ep_only' — experts on "model", everything else FSDP-only:
+    the right layout for small-d_model MoE archs where 16-way TP shards
+    are slivers and the TP all-reduces dominate the step (see §Perf).
+    """
+    name = path_keys[-1] if path_keys else ""
+    joined = "/".join(path_keys)
+
+    if profile == "ep_only":
+        if len(shape) == 3 and name in ("wg", "wu", "wd"):
+            return P("model", "data", None) if name != "wd" \
+                else P("model", None, "data")
+        if name == "embed":
+            return P(("data", "model"), None)
+        if name == "lm_head":
+            return P(None, ("data", "model"))
+        if len(shape) >= 2:
+            return P(("data", "model"),)   # pure FSDP over both axes
+        return P()
+
+    if profile == "ep_replicated":
+        # weight-stationary dense: replicate everything except experts —
+        # for MoE archs whose dense tower is tiny, this removes both the
+        # TP all-reduces and the ZeRO regathers (§Perf granite iteration).
+        if len(shape) == 3 and name in ("wg", "wu", "wd"):
+            return P("model", "data", None) if name != "wd" \
+                else P("model", None, "data")
+        return P()
+
+    if name in ("embed",):                       # (V, D)
+        return P("model", "data")
+    if name == "lm_head":                        # (D, V)
+        return P("data", "model")
+    if name in ("wq", "wk", "wv"):               # (D, heads·Dh)
+        return P("data", "model")
+    if name == "wo":                             # (heads·Dh, D)
+        return P("model", "data")
+    if name in ("wg", "wu"):
+        if len(shape) == 3:                      # MoE experts (E, D, F)
+            return P("model", "data", None)
+        return P("data", "model")                # dense (D, F)
+    if name == "wd":
+        if len(shape) == 3:                      # (E, F, D)
+            return P("model", None, "data")
+        return P("model", "data")                # dense (F, D)
+    if name == "router":                         # (D, E) — small
+        return P()
+    if name == "in_proj":                        # mamba (D, big)
+        return P("data", "model")
+    if name == "out_proj":                       # mamba (d_inner, D)
+        return P("model", "data")
+    if name == "conv_w":                         # (K, conv_dim)
+        return P(None, "model")
+    if name == "conv_b":
+        return P("model")
+    if name in ("bq", "bk", "bv"):               # attention biases
+        return P("model")
+    if "shared" in joined and name in ("wg", "wu"):
+        return P("data", "model")
+    # norms, gates, A_log, dt_bias, D_skip, q_norm/k_norm ... replicate
+    return P()
+
+
+def _path_keys(path) -> list[str]:
+    out = []
+    for p in path:
+        if hasattr(p, "key"):
+            out.append(str(p.key))
+        elif hasattr(p, "idx"):
+            out.append(f"{p.idx}")
+        elif hasattr(p, "name"):
+            out.append(str(p.name))
+    return out
+
+
+def param_specs(mesh, params_tree, profile: str = "2d") -> Any:
+    """PartitionSpec tree matching ``params_tree`` (arrays or SDS)."""
+    flat, tdef = jax.tree_util.tree_flatten_with_path(params_tree)
+    specs = []
+    for path, leaf in flat:
+        keys = _path_keys(path)
+        shape = tuple(leaf.shape)
+        stacked = "blocks" in keys and len(shape) >= 1
+        core_shape = shape[1:] if stacked else shape
+        spec = _role_spec(keys, core_shape, profile)
+        if stacked:
+            spec = P(None, *spec)
+        specs.append(fit_spec(mesh, shape, spec))
+    return tdef.unflatten(specs)
+
+
+def param_shardings(mesh, params_tree, profile: str = "2d") -> Any:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        param_specs(mesh, params_tree, profile))
+
+
+# ----------------------------------------------------------------------
+# batches / caches / optimizer state
+# ----------------------------------------------------------------------
+
+def batch_shardings(mesh, batch_tree) -> Any:
+    ba = batch_axes(mesh)
+
+    def one(leaf):
+        spec = fit_spec(mesh, tuple(leaf.shape), P(ba))
+        return NamedSharding(mesh, spec)
+    return jax.tree.map(one, batch_tree)
+
+
+def cache_shardings(mesh, cache_tree) -> Any:
+    """Decode caches: stacked (R, B, ...) leaves.
+
+    KV k/v: (R, B, S, H_stored, Dh) → batch on DP axes, heads on model.
+    Mamba conv (R, B, K-1, conv_dim) → conv_dim on model.
+    Mamba ssm  (R, B, H, N, P) → heads on model.
+    Cross media (R, B, M, H, Dh) → heads on model.
+    length scalar → replicated.
+    """
+    ba = batch_axes(mesh)
+    model_size = mesh.shape.get("model", 1)
+    flat, tdef = jax.tree_util.tree_flatten_with_path(cache_tree)
+    out = []
+    for path, leaf in flat:
+        keys = _path_keys(path)
+        shape = tuple(leaf.shape)
+        name = keys[-1] if keys else ""
+        if name == "length" or len(shape) == 0:
+            spec = P()
+        elif name in ("k", "v") and len(shape) == 5:
+            # (R, B, S, H_stored, Dh): prefer head sharding; if the stored
+            # heads don't divide the TP axis, shard the sequence instead
+            # (flash-decoding: partial softmax stats all-reduce — XLA
+            # derives it from the partial reductions).
+            if shape[3] % model_size == 0:
+                spec = P(None, ba, None, "model", None)
+            else:
+                spec = P(None, ba, "model", None, None)
+        elif name == "conv":
+            spec = P(None, ba, None, "model")
+        elif name == "ssm":
+            spec = P(None, ba, "model", None, None)
+        else:
+            spec = P(None, ba)
+        out.append(NamedSharding(mesh, fit_spec(mesh, shape, spec)))
+    return tdef.unflatten(out)
+
+
+def opt_state_shardings(mesh, opt_tree, params_shardings: Any) -> Any:
+    """m is param-shaped → reuse the param shardings. v likewise, except
+    factored (vr/vc dict) leaves, which are small → replicated. count
+    replicated."""
+    out = {}
+    is_v_leaf = lambda x: isinstance(x, dict) and "vr" in x
+    for key, sub in opt_tree.items():
+        if key == "m":
+            out[key] = params_shardings
+        elif key == "v":
+            flat_v, vdef = jax.tree_util.tree_flatten(sub, is_leaf=is_v_leaf)
+            flat_ps = jax.tree_util.tree_leaves(params_shardings)
+            leaves = []
+            for v, ps in zip(flat_v, flat_ps):
+                if is_v_leaf(v):
+                    leaves.append(dict(vr=replicated(mesh),
+                                       vc=replicated(mesh)))
+                else:
+                    leaves.append(ps)
+            out[key] = jax.tree_util.tree_unflatten(vdef, leaves)
+        else:
+            out[key] = jax.tree.map(lambda _: replicated(mesh), sub)
+    return out

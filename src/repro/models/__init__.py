@@ -1,0 +1,9 @@
+"""Composable model definitions (pattern-scanned stacks)."""
+
+from . import layers, model, stack
+from .model import (abstract_params, active_param_count, decode_step,
+                    forward, init_params, param_count, prefill, train_loss)
+
+__all__ = ["layers", "model", "stack", "init_params", "abstract_params",
+           "forward", "train_loss", "prefill", "decode_step",
+           "param_count", "active_param_count"]

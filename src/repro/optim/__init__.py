@@ -1,0 +1,6 @@
+from .optimizer import (AdamWConfig, CompressionState, accumulate_gradients,
+                        adamw_init, adamw_update, clip_by_global_norm,
+                        compressed_gradients, cosine_schedule, global_norm)
+__all__ = ["AdamWConfig", "adamw_init", "adamw_update", "cosine_schedule",
+           "global_norm", "clip_by_global_norm", "accumulate_gradients",
+           "compressed_gradients", "CompressionState"]

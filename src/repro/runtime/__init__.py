@@ -1,0 +1,2 @@
+from .ft import HeartbeatMonitor, RemeshPlan, Supervisor, plan_elastic_remesh
+__all__ = ["HeartbeatMonitor", "Supervisor", "plan_elastic_remesh", "RemeshPlan"]

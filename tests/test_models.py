@@ -1,0 +1,143 @@
+"""Per-arch smoke tests (reduced configs): one train step + one
+prefill/decode consistency pass on CPU, asserting shapes and finiteness."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import model
+
+ARCHS = list(configs.ARCHS)
+KEY = jax.random.PRNGKey(0)
+
+
+def _batch(cfg, B=2, S=16, seed=0):
+    k = jax.random.PRNGKey(seed)
+    b = {"labels": jax.random.randint(k, (B, S), 0, cfg.vocab_size)}
+    if cfg.embeds_input:
+        b["embeds"] = jax.random.normal(k, (B, S, cfg.d_model),
+                                        dtype=jnp.float32)
+    else:
+        b["tokens"] = jax.random.randint(k, (B, S), 0, cfg.vocab_size)
+    if cfg.num_media_tokens:
+        b["media"] = jax.random.normal(
+            k, (B, cfg.num_media_tokens, cfg.d_model))
+    return b
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_train_step_smoke(arch):
+    cfg = configs.get(arch).reduced()
+    params = model.init_params(cfg, KEY)
+    batch = _batch(cfg)
+    (loss, metrics), grads = jax.value_and_grad(
+        lambda p: model.train_loss(p, cfg, batch), has_aux=True)(params)
+    assert np.isfinite(float(loss))
+    assert np.isfinite(float(metrics["ce"]))
+    gnorm = sum(float(jnp.sum(g.astype(jnp.float32) ** 2))
+                for g in jax.tree.leaves(grads))
+    assert np.isfinite(gnorm) and gnorm > 0
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_shapes(arch):
+    cfg = configs.get(arch).reduced()
+    params = model.init_params(cfg, KEY)
+    b = _batch(cfg, B=2, S=8)
+    logits, aux = model.forward(params, cfg, tokens=b.get("tokens"),
+                                embeds=b.get("embeds"),
+                                media=b.get("media"))
+    assert logits.shape == (2, 8, cfg.vocab_size)
+    assert logits.dtype == jnp.float32
+    assert bool(jnp.isfinite(logits).all())
+
+
+@pytest.mark.parametrize("arch", [a for a in ARCHS
+                                  if not configs.get(a).is_encoder])
+def test_prefill_decode_consistency(arch):
+    cfg = configs.get(arch).reduced()
+    if cfg.moe_num_experts:
+        # ample capacity ⇒ routing independent of token grouping
+        cfg = dataclasses.replace(
+            cfg, capacity_factor=float(cfg.moe_num_experts))
+    params = model.init_params(cfg, KEY)
+    B, S = 2, 12
+    b = _batch(cfg, B=B, S=S + 1, seed=3)
+    tokens = b["tokens"]
+    media = b.get("media")
+    full, _ = model.forward(params, cfg, tokens=tokens, media=media)
+    last, caches = model.prefill(params, cfg, tokens=tokens[:, :S],
+                                 media=media, max_len=S + 4)
+    np.testing.assert_allclose(np.asarray(last[:, 0]),
+                               np.asarray(full[:, S - 1]),
+                               rtol=3e-3, atol=3e-3)
+    dl, caches = model.decode_step(params, cfg, caches, tokens[:, S:S + 1])
+    np.testing.assert_allclose(np.asarray(dl[:, 0]),
+                               np.asarray(full[:, S]),
+                               rtol=3e-3, atol=3e-3)
+    assert int(caches["length"]) == S + 1
+
+
+def test_encoder_has_bidirectional_attention():
+    """hubert forward must differ from a causal run of the same weights."""
+    cfg = configs.get("hubert-xlarge").reduced()
+    params = model.init_params(cfg, KEY)
+    b = _batch(cfg, B=1, S=8)
+    out1, _ = model.forward(params, cfg, embeds=b["embeds"])
+    causal_cfg = dataclasses.replace(cfg, is_encoder=False)
+    out2, _ = model.forward(params, causal_cfg, embeds=b["embeds"])
+    assert not np.allclose(np.asarray(out1[:, 0]), np.asarray(out2[:, 0]),
+                           atol=1e-5)
+
+
+def test_label_masking():
+    cfg = configs.get("stablelm-1.6b").reduced()
+    params = model.init_params(cfg, KEY)
+    b = _batch(cfg, B=2, S=8)
+    l_all, _ = model.train_loss(params, cfg, b)
+    b2 = dict(b, labels=b["labels"].at[0].set(-100))
+    l_masked, _ = model.train_loss(params, cfg, b2)
+    assert not np.isclose(float(l_all), float(l_masked))
+
+
+def test_param_counts_match_published_sizes():
+    """Full configs: derived param counts sit near the advertised sizes."""
+    expected = {
+        "qwen2.5-3b": (2.5e9, 3.6e9),
+        "qwen3-14b": (13e9, 15.5e9),
+        "command-r-35b": (28e9, 38e9),
+        "llama-3.2-vision-90b": (80e9, 95e9),
+        "jamba-1.5-large-398b": (370e9, 420e9),
+        "mamba2-1.3b": (1.1e9, 1.5e9),
+        "granite-moe-1b-a400m": (1.0e9, 1.6e9),
+        "llama4-scout-17b-a16e": (95e9, 118e9),
+        "stablelm-1.6b": (1.4e9, 1.9e9),
+        "hubert-xlarge": (0.8e9, 1.3e9),
+    }
+    for arch, (lo, hi) in expected.items():
+        n = model.param_count(configs.get(arch))
+        assert lo <= n <= hi, f"{arch}: {n/1e9:.2f}B not in [{lo/1e9}, {hi/1e9}]"
+
+
+def test_active_params_moe():
+    cfg = configs.get("granite-moe-1b-a400m")
+    total = model.param_count(cfg)
+    active = model.active_param_count(cfg)
+    assert active < total
+    assert 0.25e9 < active < 0.65e9     # “a400m” ≈ 0.4B active
+
+
+def test_kv_repeat_equivalence():
+    """kv_repeat is a layout change only — logits must be identical."""
+    cfg = configs.get("command-r-35b").reduced()
+    params = model.init_params(cfg, KEY)
+    b = _batch(cfg, B=1, S=8)
+    out1, _ = model.forward(params, cfg, tokens=b["tokens"])
+    cfg2 = dataclasses.replace(cfg, kv_repeat=2)
+    out2, _ = model.forward(params, cfg2, tokens=b["tokens"])
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2),
+                               rtol=1e-4, atol=1e-4)

@@ -1,0 +1,94 @@
+"""Unit + property tests for the paper's priority allocation (Figs 2-4)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import priority, topology
+
+
+def test_x4600_shape():
+    topo = topology.sunfire_x4600()
+    assert topo.num_cores == 16
+    assert topo.num_nodes == 8
+    assert topo.max_distance() == 3           # paper: up to 3 hops
+    d = topo.node_distance
+    assert (d == d.T).all() and (np.diag(d) == 0).all()
+
+
+def test_priorities_levels_positive():
+    topo = topology.sunfire_x4600()
+    pr = priority.priorities(topo)
+    assert (pr.v1 > 0).all() and (pr.v2 > 0).all()
+    assert np.isfinite(pr.total).all()
+
+
+def test_uma_all_equal():
+    """Paper: equal node sizes + uniform distances ⇒ same priority."""
+    topo = topology.uma(8)
+    pr = priority.priorities(topo)
+    assert np.allclose(pr.total, pr.total[0])
+
+
+def test_central_nodes_outrank_corners():
+    """X4600 I/O corners (nodes 0, 6) must rank below inner sockets."""
+    topo = topology.sunfire_x4600()
+    pr = priority.priorities(topo)
+    corner = max(pr.total[0], pr.total[1], pr.total[12], pr.total[13])
+    inner = min(pr.total[4], pr.total[6], pr.total[8], pr.total[10])
+    assert inner > corner
+
+
+def test_master_is_top_priority():
+    topo = topology.sunfire_x4600()
+    pr = priority.priorities(topo)
+    alloc = priority.allocate_threads(topo, 16, seed=1)
+    assert pr.total[alloc[0]] == pr.total.max()
+    assert len(set(alloc)) == 16              # all distinct cores
+
+
+def test_workers_cluster_near_master():
+    """Paper: workers placed as close as possible to the master."""
+    topo = topology.sunfire_x4600()
+    alloc = priority.allocate_threads(topo, 4, seed=0)
+    dist = topo.core_distance_matrix()
+    d_in = max(dist[alloc[0], c] for c in alloc[1:])
+    others = [c for c in range(16) if c not in alloc]
+    # every allocated worker is at least as close as the nearest skipped core
+    assert d_in <= min(dist[alloc[0], c] for c in others) + 1
+
+
+def test_occupied_cores_excluded():
+    topo = topology.sunfire_x4600()
+    avail = list(range(8))
+    alloc = priority.allocate_threads(topo, 4, available=avail)
+    assert set(alloc) <= set(avail)
+
+
+def test_weights_must_decrease():
+    topo = topology.sunfire_x4600()
+    with pytest.raises(ValueError):
+        priority.priorities(topo, weights=np.array([1.0, 1.0, 0.5, 0.2]))
+
+
+@settings(max_examples=25, deadline=None)
+@given(rows=st.integers(2, 4), cols=st.integers(2, 4),
+       seed=st.integers(0, 5))
+def test_allocation_valid_on_tori(rows, cols, seed):
+    """Property: any torus — allocation is a valid, deterministic set."""
+    topo = topology.tpu_pod_2d(rows, cols)
+    n = topo.num_cores
+    a1 = priority.allocate_threads(topo, n, seed=seed)
+    a2 = priority.allocate_threads(topo, n, seed=seed)
+    assert a1 == a2                           # deterministic per seed
+    assert sorted(a1) == list(range(n))       # a permutation
+
+
+@settings(max_examples=20, deadline=None)
+@given(k=st.integers(1, 15), seed=st.integers(0, 3))
+def test_prefix_consistency(k, seed):
+    """Allocating k threads yields a prefix-stable master (thread 0)."""
+    topo = topology.sunfire_x4600()
+    a_full = priority.allocate_threads(topo, 16, seed=seed)
+    a_k = priority.allocate_threads(topo, k, seed=seed)
+    assert a_k[0] == a_full[0]

@@ -1,0 +1,118 @@
+"""Properties of the sharding rules engine and the roofline model, plus
+dry-run artifact integrity (when artifacts are present)."""
+
+import glob
+import json
+import os
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from jax.sharding import PartitionSpec as P
+
+from repro import configs
+from repro.launch.shardings import fit_spec
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+
+
+class _FakeMesh:
+    def __init__(self, shape):
+        self.shape = shape
+        self.axis_names = tuple(shape)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    d0=st.integers(1, 4096), d1=st.integers(1, 4096),
+    a0=st.sampled_from([None, "data", "model", ("data", "model")]),
+    a1=st.sampled_from([None, "data", "model"]),
+    data=st.sampled_from([2, 4, 16]), model=st.sampled_from([2, 8, 16]),
+)
+def test_fit_spec_always_divides(d0, d1, a0, a1, data, model):
+    """Property: whatever fit_spec keeps divides its dimension."""
+    mesh = _FakeMesh({"data": data, "model": model})
+    p = fit_spec(mesh, (d0, d1), P(a0, a1))
+    entries = tuple(p) + (None,) * (2 - len(tuple(p)))
+    for dim, ax in zip((d0, d1), entries):
+        if ax is None:
+            continue
+        axes = ax if isinstance(ax, tuple) else (ax,)
+        total = int(np.prod([mesh.shape[a] for a in axes]))
+        assert dim % total == 0
+
+
+@pytest.mark.parametrize("mesh_kind", ["single", "multi"])
+def test_analytic_terms_all_cells(mesh_kind):
+    """Roofline terms are finite/positive and structurally sane for all
+    31 runnable cells."""
+    from benchmarks.roofline import analytic_terms
+    for arch in configs.ARCHS:
+        cfg = configs.get(arch)
+        for shape in cfg.shapes():
+            a = analytic_terms(arch, shape, mesh_kind, micro=4)
+            assert a["flops_dev"] > 0 and np.isfinite(a["flops_dev"])
+            assert a["bytes_dev"] > 0 and np.isfinite(a["bytes_dev"])
+            assert a["ici_bytes"] >= 0 and a["dci_bytes"] >= 0
+            # total flops at least the useful model flops
+            assert a["flops_dev"] >= a["model_flops_dev"] * 0.99
+            kind = configs.SHAPES[shape].kind
+            if kind == "decode":
+                # decode must be memory-heavy relative to compute
+                assert a["bytes_dev"] / 819e9 > a["flops_dev"] / 197e12
+            if mesh_kind == "single":
+                assert a["dci_bytes"] == 0
+
+
+def test_train_flops_scale_with_tokens():
+    from benchmarks.roofline import analytic_terms
+    a1 = analytic_terms("qwen3-14b", "train_4k", "single", micro=4)
+    a2 = analytic_terms("qwen3-14b", "prefill_32k", "single", micro=1)
+    # train does fwd+bwd (+remat): ≥3× prefill per token; token counts
+    # equal (256·4096 vs 32·32768)
+    assert a1["flops_dev"] > 2.5 * a2["flops_dev"]
+
+
+def test_microbatches_increase_gather_traffic():
+    from benchmarks.roofline import analytic_terms
+    lo = analytic_terms("command-r-35b", "train_4k", "single", micro=2)
+    hi = analytic_terms("command-r-35b", "train_4k", "single", micro=16)
+    assert hi["ici_bytes"] > lo["ici_bytes"]
+
+
+@pytest.mark.skipif(not glob.glob(os.path.join(ART, "*.json")),
+                    reason="dry-run artifacts not generated")
+def test_dryrun_artifacts_complete_and_wellformed():
+    """The 40-cell grid: 31 ok + 9 documented skips on both meshes."""
+    seen = {}
+    for p in glob.glob(os.path.join(ART, "*.json")):
+        with open(p) as f:
+            rec = json.load(f)
+        seen[(rec["arch"], rec["shape"], rec["mesh"])] = rec["status"]
+    for arch in configs.ARCHS:
+        cfg = configs.get(arch)
+        for mesh in ("single", "multi"):
+            for shape in cfg.shapes():
+                assert seen.get((arch, shape, mesh)) == "ok", \
+                    (arch, shape, mesh)
+            for shape in cfg.skipped_shapes():
+                assert seen.get((arch, shape, mesh)) in ("skipped", None)
+    oks = [k for k, v in seen.items() if v == "ok"]
+    assert len(oks) == 62      # 31 cells × 2 meshes
+
+
+@pytest.mark.skipif(not glob.glob(os.path.join(ART, "*.json")),
+                    reason="dry-run artifacts not generated")
+def test_dryrun_ok_cells_have_cost_and_collectives():
+    for p in glob.glob(os.path.join(ART, "*.json")):
+        with open(p) as f:
+            rec = json.load(f)
+        if rec["status"] != "ok":
+            continue
+        assert rec["cost"]["flops_per_device"] is not None
+        assert rec["memory"]["argument_bytes"] is not None
+        assert isinstance(rec["collectives"], dict)
+        if rec["kind"] == "train":
+            # every training step must synchronize gradients somehow
+            assert any(k in rec["collectives"]
+                       for k in ("all-reduce", "reduce-scatter")), p

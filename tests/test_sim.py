@@ -1,0 +1,150 @@
+"""Simulator tests: determinism, invariants, and the paper's headline
+qualitative claims (bf collapse on data-intensive benchmarks, NUMA-aware
+allocation gains, scheduler ordering)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import placement, priority, topology
+from repro.core.sim import (SimParams, bots, serial_time, simulate,
+                            SCHEDULERS, TaskSpec, Workload)
+
+TOPO = topology.sunfire_x4600()
+PR = priority.priorities(TOPO)
+
+
+def _numa_setup(T):
+    alloc = priority.allocate_threads(TOPO, T)
+    mn = int(TOPO.core_node[alloc[0]])
+    spill = placement.first_touch_spill(TOPO, mn, 2, PR)
+    return alloc, spill
+
+
+def test_deterministic():
+    wl = bots.fft(n=1 << 10, cutoff=8)
+    r1 = simulate(TOPO, list(range(8)), wl, "wf", seed=3)
+    r2 = simulate(TOPO, list(range(8)), wl, "wf", seed=3)
+    assert r1.makespan == r2.makespan and r1.steals == r2.steals
+
+
+def test_all_work_executes():
+    """Makespan ≥ total work / threads (work conservation bound)."""
+    wl = bots.sort(n=1 << 10, cutoff=8)
+    for sched in SCHEDULERS:
+        r = simulate(TOPO, list(range(8)), wl, sched, seed=0)
+        assert r.makespan >= wl.root.total_work() / 8
+        assert r.speedup <= 8.5               # no spurious super-linear
+
+
+def test_single_thread_close_to_serial():
+    wl = bots.fft(n=1 << 10, cutoff=8)
+    r = simulate(TOPO, [0], wl, "wf", seed=0)
+    assert 0.9 <= r.speedup <= 1.0 + 1e-9
+
+
+def test_bf_collapses_on_fft():
+    """Paper Fig 7: breadth-first degrades for FFT beyond ~6 cores."""
+    wl = bots.fft(n=1 << 15, cutoff=4)
+    spill = placement.first_touch_spill(TOPO, 0, 2)
+    serial = serial_time(TOPO, wl, 0, spill)
+    sp = {}
+    for T in (6, 16):
+        r = simulate(TOPO, list(range(T)), wl, "bf", seed=0,
+                     root_data_nodes=spill, runtime_data_node=0,
+                     migration_rate=0.15, serial_reference=serial)
+        sp[T] = r.speedup
+    ws = simulate(TOPO, list(range(16)), wl, "wf", seed=0,
+                  root_data_nodes=spill, runtime_data_node=0,
+                  migration_rate=0.15, serial_reference=serial)
+    assert sp[16] < sp[6] * 1.35              # no scaling 6 → 16
+    assert ws.speedup > 2.5 * sp[16]          # work stealing far ahead
+
+
+def test_numa_allocation_helps_data_intensive():
+    """Paper §V: NUMA-aware allocation speeds up FFT/Sort/Strassen."""
+    for name in ("fft", "strassen"):
+        wl = bots.make(name, "medium") if name != "fft" \
+            else bots.fft(n=1 << 14, cutoff=4)
+        spill0 = placement.first_touch_spill(TOPO, 0, 2)
+        serial = serial_time(TOPO, wl, 0, spill0)
+        base = simulate(TOPO, list(range(16)), wl, "wf", seed=0,
+                        root_data_nodes=spill0, runtime_data_node=0,
+                        migration_rate=0.15, serial_reference=serial)
+        alloc, spill = _numa_setup(16)
+        numa = simulate(TOPO, alloc, wl, "wf", seed=0,
+                        root_data_nodes=spill, serial_reference=serial)
+        assert numa.speedup > base.speedup * 1.02, name
+
+
+def test_numa_gain_small_for_compute_bound():
+    """Paper: NQueens gains only ~1.35% (compute-bound)."""
+    wl = bots.nqueens(n=11)
+    spill0 = placement.first_touch_spill(TOPO, 0, 1)
+    serial = serial_time(TOPO, wl, 0, spill0)
+    base = simulate(TOPO, list(range(16)), wl, "wf", seed=0,
+                    root_data_nodes=spill0, runtime_data_node=0,
+                    migration_rate=0.15, serial_reference=serial)
+    alloc, spill = _numa_setup(16)
+    numa = simulate(TOPO, alloc, wl, "wf", seed=0,
+                    root_data_nodes=spill[:1], serial_reference=serial)
+    gain = numa.speedup / base.speedup - 1
+    assert -0.05 < gain < 0.15
+
+
+def test_dfwspt_stealing_is_local():
+    """NUMA-aware stealing keeps probes closer than random stealing."""
+    wl = bots.strassen(depth=4)
+    alloc, spill = _numa_setup(16)
+    r_wf = simulate(TOPO, alloc, wl, "wf", seed=0, root_data_nodes=spill)
+    r_pt = simulate(TOPO, alloc, wl, "dfwspt", seed=0,
+                    root_data_nodes=spill)
+    assert r_pt.steals > 0 and r_wf.steals > 0
+    assert r_pt.makespan <= r_wf.makespan * 1.1
+
+
+@settings(max_examples=15, deadline=None)
+@given(sched=st.sampled_from(SCHEDULERS), T=st.sampled_from([2, 4, 8]),
+       seed=st.integers(0, 3))
+def test_speedup_bounds_property(sched, T, seed):
+    """Property: 0 < speedup ≤ T (+small slack) for any scheduler/thread mix."""
+    wl = bots.floorplan(depth=4)
+    r = simulate(TOPO, list(range(T)), wl, sched, seed=seed)
+    assert 0 < r.speedup <= T * 1.1
+
+
+@settings(max_examples=10, deadline=None)
+@given(depth=st.integers(1, 4), branch=st.integers(1, 5))
+def test_taskspec_counts(depth, branch):
+    """Property: count/total_work agree with an independent recursion."""
+    def build(d):
+        kids = [build(d - 1) for _ in range(branch)] if d else []
+        return TaskSpec(work_pre=1.0, work_post=0.5, children=kids)
+    root = build(depth)
+    expect = sum(branch ** i for i in range(depth + 1))
+    assert root.count() == expect
+    assert root.total_work() == pytest.approx(1.5 * expect)
+
+
+def test_paper_fft_scheduler_ordering():
+    """Integration: the paper's FFT@16 ordering
+    bf ≪ cilk ≤ wf < {wf,cilk}+NUMA ≤ DFWSPT/DFWSRPT."""
+    wl = bots.fft(n=1 << 15, cutoff=4)
+    spill0 = placement.first_touch_spill(TOPO, 0, 2)
+    serial = serial_time(TOPO, wl, 0, spill0)
+
+    def base(s):
+        return simulate(TOPO, list(range(16)), wl, s, seed=0,
+                        root_data_nodes=spill0, runtime_data_node=0,
+                        migration_rate=0.15, serial_reference=serial).speedup
+
+    alloc, spill = _numa_setup(16)
+
+    def numa(s):
+        return simulate(TOPO, alloc, wl, s, seed=0,
+                        root_data_nodes=spill,
+                        serial_reference=serial).speedup
+
+    assert base("bf") < 0.5 * base("wf")
+    assert numa("wf") > base("wf")
+    assert max(numa("dfwspt"), numa("dfwsrpt")) >= numa("wf") * 0.98
