@@ -1,0 +1,128 @@
+"""Simulation-engine micro-benchmark: times `simulate()` across
+schedulers, workload scales, and engines, and writes ``BENCH_sim.json``
+so future PRs can track performance trajectories.
+
+Methodology: per configuration we report
+
+  * ``cold_s``  — first call on a freshly built workload (includes the
+    one-time tree→CSR compile and the serial-reference walk);
+  * ``warm_s``  — best of ``--reps`` steady-state calls (compiled table
+    and serial reference cached), the regime the paper-reproduction
+    driver (`bots_repro`, ~230 simulate calls over 6 reused workloads)
+    actually runs in;
+  * ``tasks_per_s`` — warm throughput.
+
+Engines: ``c`` is the compiled flat-array kernel, ``py`` the pure-Python
+flat reference engine (also run when the C kernel is unavailable). Both
+are bit-exact replicas of the seed engine (see tests/test_sim_golden).
+
+    PYTHONPATH=src python -m benchmarks.bench_sim [--quick] [--out PATH]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import platform
+import time
+
+from repro.core import priority, topology
+from repro.core.sim import SCHEDULERS, bots, ensure_table, simulate
+from repro.core.sim import _csim
+
+
+def _workloads(quick: bool):
+    yield ("fft", "small", lambda: bots.fft(n=1 << 10, cutoff=8))
+    yield ("fft", "medium", lambda: bots.fft(n=1 << 15, cutoff=4))
+    if not quick:
+        yield ("sort", "medium", lambda: bots.sort(n=1 << 15, cutoff=4))
+        yield ("fft", "paper", lambda: bots.make("fft", "paper"))
+        yield ("sort", "paper", lambda: bots.make("sort", "paper"))
+        yield ("strassen", "paper", lambda: bots.make("strassen", "paper"))
+
+
+def bench(quick: bool = False, reps: int = 5, threads: int = 16):
+    topo = topology.sunfire_x4600()
+    alloc = priority.allocate_threads(topo, threads)
+    engines = ["py"] if _csim.load() is None else ["c", "py"]
+    saved_engine = os.environ.get("REPRO_SIM_ENGINE")
+    try:
+        for name, scale, build in _workloads(quick):
+            # the py engine sits out the ≥1M-task tier (minutes per call;
+            # the C kernel owns it) — skip before paying the build cost
+            scale_engines = [e for e in engines
+                             if not (e == "py" and scale == "paper")]
+            if not scale_engines:
+                continue
+            schedulers = SCHEDULERS if scale != "paper" else ("wf", "dfwsrpt")
+            for engine in scale_engines:
+                os.environ["REPRO_SIM_ENGINE"] = engine
+                for sched in schedulers:
+                    # cold: fresh workload object, nothing cached — the
+                    # cold_s rows track the one-time tree/table build +
+                    # compile + serial-reference walk per row
+                    t0 = time.perf_counter()
+                    wl_cold = build()
+                    build_s = time.perf_counter() - t0
+                    t0 = time.perf_counter()
+                    r = simulate(topo, alloc, wl_cold, sched, seed=0)
+                    cold_s = time.perf_counter() - t0
+                    # warm: steady state (table + serial ref cached)
+                    warm = []
+                    for _ in range(reps):
+                        t0 = time.perf_counter()
+                        r = simulate(topo, alloc, wl_cold, sched, seed=0)
+                        warm.append(time.perf_counter() - t0)
+                    warm_s = min(warm)
+                    tasks = ensure_table(wl_cold).n
+                    yield dict(
+                        workload=name, scale=scale, tasks=tasks,
+                        scheduler=sched, engine=engine, threads=threads,
+                        build_s=round(build_s, 6), cold_s=round(cold_s, 6),
+                        warm_s=round(warm_s, 6),
+                        tasks_per_s=round(tasks / warm_s, 1),
+                        makespan=r.makespan, speedup=round(r.speedup, 4),
+                        steals=r.steals)
+    finally:
+        if saved_engine is None:
+            os.environ.pop("REPRO_SIM_ENGINE", None)
+        else:
+            os.environ["REPRO_SIM_ENGINE"] = saved_engine
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--reps", type=int, default=5)
+    ap.add_argument("--threads", type=int, default=16)
+    ap.add_argument("--out", default="BENCH_sim.json")
+    args = ap.parse_args()
+
+    rows = []
+    print("workload,scale,tasks,scheduler,engine,build_s,cold_s,warm_s,"
+          "tasks_per_s,speedup,steals")
+    for row in bench(args.quick, args.reps, args.threads):
+        rows.append(row)
+        print(f"{row['workload']},{row['scale']},{row['tasks']},"
+              f"{row['scheduler']},{row['engine']},{row['build_s']:.3f},"
+              f"{row['cold_s']:.4f},{row['warm_s']:.4f},"
+              f"{row['tasks_per_s']:.0f},{row['speedup']},{row['steals']}",
+              flush=True)
+
+    doc = dict(
+        meta=dict(
+            host=platform.node(), python=platform.python_version(),
+            c_kernel=_csim.load() is not None,
+            c_kernel_error=_csim.load_error,
+            timestamp=time.strftime("%Y-%m-%dT%H:%M:%S"),
+            note="warm_s is best-of-reps steady state; cold_s includes "
+                 "the one-time tree->CSR compile + serial reference."),
+        results=rows)
+    with open(args.out, "w") as f:
+        json.dump(doc, f, indent=1, sort_keys=True)
+    print(f"# wrote {args.out} ({len(rows)} rows)")
+
+
+if __name__ == "__main__":
+    main()

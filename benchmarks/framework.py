@@ -23,6 +23,20 @@ def _timeit(fn, *args, reps=5):
     return (time.perf_counter() - t0) / reps * 1e6  # µs
 
 
+def sim_engine(report, quick=False):
+    """Simulator-engine throughput rows (full sweep: bench_sim.py)."""
+    from benchmarks import bench_sim
+    for row in bench_sim.bench(quick=quick, reps=3):
+        report(f"sim-engine/{row['workload']}-{row['scale']}/"
+               f"{row['scheduler']}/{row['engine']}",
+               us=row["warm_s"] * 1e6,
+               derived=f"tasks={row['tasks']} "
+                       f"tps={row['tasks_per_s']:.0f} "
+                       f"cold={row['cold_s']*1e3:.1f}ms "
+                       f"speedup={row['speedup']:.2f}x")
+    return True
+
+
 def mesh_layout(report, quick=False):
     """Hop-weighted collective cost: enumeration order vs priority walk.
 

@@ -1,3 +1,3 @@
 from .runtime import (TaskSpec, Workload, SimParams, SimResult, simulate,
-                      serial_time, SCHEDULERS)
+                      serial_time, SCHEDULERS, TaskTable, ensure_table)
 from . import bots

@@ -1,0 +1,738 @@
+/* Flat-array discrete-event kernel for the NANOS task-runtime simulator.
+ *
+ * This is a bit-exact transcription of the Python reference engine
+ * (repro/core/sim/_engine_py.py), which itself preserves the seed
+ * engine's semantics draw-for-draw and float-op-for-float-op:
+ *
+ *   - event ordering: binary heap keyed (time, seq), seq assigned in
+ *     push order exactly as the reference does;
+ *   - randomness: MT19937 replicating numpy's legacy RandomState —
+ *     shuffle/randint use 32-bit masked rejection (rk_interval),
+ *     random_sample uses the two-draw 53-bit recipe (rk_double);
+ *   - wake-one parking: a replica of CPython 3.10's set object
+ *     (linear probes + perturb, fill*5 >= mask*3 resize, pop finger),
+ *     because the seed engine parks threads in a Python set and pops
+ *     an arbitrary-but-deterministic element;
+ *   - float arithmetic: identical association order, compiled with
+ *     -ffp-contract=off so no FMA contraction changes results.
+ *
+ * All arrays are structure-of-arrays views onto the Python TaskTable;
+ * no per-task allocation happens anywhere.
+ */
+
+#include <stdint.h>
+#include <stdlib.h>
+#include <string.h>
+
+/* ------------------------------------------------------------------ */
+/* MT19937 — numpy legacy RandomState bitstream replica               */
+/* ------------------------------------------------------------------ */
+
+#define MT_N 624
+#define MT_M 397
+
+typedef struct {
+    uint32_t mt[MT_N];
+    int mti;
+} rk_state;
+
+static void rk_seed(rk_state *st, uint32_t s)
+{
+    st->mt[0] = s;
+    for (int i = 1; i < MT_N; i++)
+        st->mt[i] = 1812433253U * (st->mt[i - 1] ^ (st->mt[i - 1] >> 30)) + (uint32_t)i;
+    st->mti = MT_N;
+}
+
+static uint32_t rk_random(rk_state *st)
+{
+    uint32_t y;
+    if (st->mti >= MT_N) {
+        static const uint32_t mag01[2] = {0U, 0x9908b0dfU};
+        int kk;
+        for (kk = 0; kk < MT_N - MT_M; kk++) {
+            y = (st->mt[kk] & 0x80000000U) | (st->mt[kk + 1] & 0x7fffffffU);
+            st->mt[kk] = st->mt[kk + MT_M] ^ (y >> 1) ^ mag01[y & 1U];
+        }
+        for (; kk < MT_N - 1; kk++) {
+            y = (st->mt[kk] & 0x80000000U) | (st->mt[kk + 1] & 0x7fffffffU);
+            st->mt[kk] = st->mt[kk + (MT_M - MT_N)] ^ (y >> 1) ^ mag01[y & 1U];
+        }
+        y = (st->mt[MT_N - 1] & 0x80000000U) | (st->mt[0] & 0x7fffffffU);
+        st->mt[MT_N - 1] = st->mt[MT_M - 1] ^ (y >> 1) ^ mag01[y & 1U];
+        st->mti = 0;
+    }
+    y = st->mt[st->mti++];
+    y ^= y >> 11;
+    y ^= (y << 7) & 0x9d2c5680U;
+    y ^= (y << 15) & 0xefc60000U;
+    y ^= y >> 18;
+    return y;
+}
+
+/* rk_interval: bounded draw in [0, max] via masked rejection (the draw
+ * pattern used by RandomState.shuffle and by scalar randint for ranges
+ * that fit in 32 bits). */
+static uint32_t rk_interval(rk_state *st, uint32_t max)
+{
+    uint32_t mask = max, v;
+    mask |= mask >> 1; mask |= mask >> 2; mask |= mask >> 4;
+    mask |= mask >> 8; mask |= mask >> 16;
+    do {
+        v = rk_random(st) & mask;
+    } while (v > max);
+    return v;
+}
+
+static double rk_double(rk_state *st)
+{
+    uint32_t a = rk_random(st) >> 5, b = rk_random(st) >> 6;
+    return (a * 67108864.0 + b) / 9007199254740992.0;
+}
+
+/* Fisher-Yates matching RandomState.shuffle on a Python list. */
+static void rk_shuffle(rk_state *st, int64_t *x, int64_t n)
+{
+    for (int64_t i = n - 1; i > 0; i--) {
+        uint32_t j = rk_interval(st, (uint32_t)i);
+        int64_t tmp = x[i]; x[i] = x[j]; x[j] = tmp;
+    }
+}
+
+/* ------------------------------------------------------------------ */
+/* CPython 3.10 set replica (int keys >= 0): add + pop only           */
+/* ------------------------------------------------------------------ */
+
+#define SET_MINSIZE 8
+#define LINEAR_PROBES 9
+#define PERTURB_SHIFT 5
+
+#define SLOT_EMPTY 0
+#define SLOT_ACTIVE 1
+#define SLOT_DUMMY 2
+
+typedef struct {
+    int64_t *key;
+    uint8_t *state;
+    size_t mask, fill, used, finger;
+} pyset_t;
+
+static int pyset_init(pyset_t *s)
+{
+    s->mask = SET_MINSIZE - 1;
+    s->fill = s->used = s->finger = 0;
+    s->key = (int64_t *)calloc(SET_MINSIZE, sizeof(int64_t));
+    s->state = (uint8_t *)calloc(SET_MINSIZE, 1);
+    return (s->key && s->state) ? 0 : -1;
+}
+
+static void pyset_free(pyset_t *s)
+{
+    free(s->key); free(s->state);
+}
+
+/* insert into a clean (dummy-free) table; used by resize */
+static void pyset_insert_clean(int64_t *keyt, uint8_t *statet, size_t mask,
+                               int64_t key)
+{
+    size_t perturb = (size_t)key;
+    size_t i = (size_t)key & mask;
+    while (1) {
+        size_t j = i;
+        size_t probes = (i + LINEAR_PROBES <= mask) ? LINEAR_PROBES : 0;
+        do {
+            if (statet[j] == SLOT_EMPTY) {
+                keyt[j] = key; statet[j] = SLOT_ACTIVE;
+                return;
+            }
+            j++;
+        } while (probes--);
+        perturb >>= PERTURB_SHIFT;
+        i = (i * 5 + 1 + perturb) & mask;
+    }
+}
+
+static int pyset_resize(pyset_t *s, size_t minused)
+{
+    size_t newsize = SET_MINSIZE;
+    while (newsize <= minused)
+        newsize <<= 1;
+    int64_t *nk = (int64_t *)calloc(newsize, sizeof(int64_t));
+    uint8_t *ns = (uint8_t *)calloc(newsize, 1);
+    if (!nk || !ns) { free(nk); free(ns); return -1; }
+    for (size_t j = 0; j <= s->mask; j++)
+        if (s->state[j] == SLOT_ACTIVE)
+            pyset_insert_clean(nk, ns, newsize - 1, s->key[j]);
+    free(s->key); free(s->state);
+    s->key = nk; s->state = ns;
+    s->mask = newsize - 1;
+    s->fill = s->used;
+    return 0;
+}
+
+static int pyset_add(pyset_t *s, int64_t key)
+{
+    size_t perturb = (size_t)key;
+    size_t mask = s->mask;
+    size_t i = (size_t)key & mask;
+    size_t freeslot = (size_t)-1;
+    while (1) {
+        size_t j = i;
+        size_t probes = (i + LINEAR_PROBES <= mask) ? LINEAR_PROBES : 0;
+        do {
+            if (s->state[j] == SLOT_EMPTY) {
+                if (freeslot != (size_t)-1) {
+                    s->used++;
+                    s->key[freeslot] = key; s->state[freeslot] = SLOT_ACTIVE;
+                    return 0;
+                }
+                s->fill++; s->used++;
+                s->key[j] = key; s->state[j] = SLOT_ACTIVE;
+                if (s->fill * 5 < mask * 3)
+                    return 0;
+                return pyset_resize(s, s->used > 50000 ? s->used * 2
+                                                       : s->used * 4);
+            }
+            if (s->state[j] == SLOT_ACTIVE && s->key[j] == key)
+                return 0; /* already present */
+            if (s->state[j] == SLOT_DUMMY)
+                freeslot = j;
+            j++;
+        } while (probes--);
+        perturb >>= PERTURB_SHIFT;
+        i = (i * 5 + 1 + perturb) & mask;
+    }
+}
+
+static int64_t pyset_pop(pyset_t *s)
+{
+    size_t i = s->finger & s->mask;
+    while (s->state[i] != SLOT_ACTIVE) {
+        i++;
+        if (i > s->mask)
+            i = 0;
+    }
+    int64_t key = s->key[i];
+    s->state[i] = SLOT_DUMMY;
+    s->used--;
+    s->finger = i + 1;
+    return key;
+}
+
+/* ------------------------------------------------------------------ */
+/* Event heap keyed (time, seq) — indexed, no boxing                  */
+/* ------------------------------------------------------------------ */
+
+typedef struct {
+    double t;
+    uint64_t seq;
+    int32_t th;
+    int64_t task; /* -1 = acquire-from-pool */
+} ev_t;
+
+typedef struct {
+    ev_t *e;
+    size_t len, cap;
+} heap_t;
+
+static int heap_init(heap_t *h, size_t cap)
+{
+    h->e = (ev_t *)malloc(cap * sizeof(ev_t));
+    h->len = 0; h->cap = cap;
+    return h->e ? 0 : -1;
+}
+
+static inline int ev_lt(const ev_t *a, const ev_t *b)
+{
+    return a->t < b->t || (a->t == b->t && a->seq < b->seq);
+}
+
+static int heap_push(heap_t *h, double t, uint64_t seq, int32_t th, int64_t task)
+{
+    if (h->len == h->cap) {
+        size_t nc = h->cap * 2;
+        ev_t *ne = (ev_t *)realloc(h->e, nc * sizeof(ev_t));
+        if (!ne) return -1;
+        h->e = ne; h->cap = nc;
+    }
+    size_t i = h->len++;
+    ev_t v = {t, seq, th, task};
+    while (i > 0) {
+        size_t p = (i - 1) >> 1;
+        if (!ev_lt(&v, &h->e[p]))
+            break;
+        h->e[i] = h->e[p];
+        i = p;
+    }
+    h->e[i] = v;
+    return 0;
+}
+
+static ev_t heap_pop(heap_t *h)
+{
+    ev_t top = h->e[0];
+    ev_t last = h->e[--h->len];
+    size_t n = h->len, i = 0;
+    while (1) {
+        size_t c = 2 * i + 1;
+        if (c >= n) break;
+        if (c + 1 < n && ev_lt(&h->e[c + 1], &h->e[c]))
+            c++;
+        if (!ev_lt(&h->e[c], &last))
+            break;
+        h->e[i] = h->e[c];
+        i = c;
+    }
+    if (n)
+        h->e[i] = last;
+    return top;
+}
+
+/* ------------------------------------------------------------------ */
+/* Growable ring deque of task ids                                    */
+/* ------------------------------------------------------------------ */
+
+typedef struct {
+    int64_t *buf;
+    size_t cap, head, len; /* cap is a power of two */
+} ring_t;
+
+static int ring_init(ring_t *r, size_t cap)
+{
+    r->buf = (int64_t *)malloc(cap * sizeof(int64_t));
+    r->cap = cap; r->head = 0; r->len = 0;
+    return r->buf ? 0 : -1;
+}
+
+static int ring_grow(ring_t *r)
+{
+    size_t nc = r->cap * 2;
+    int64_t *nb = (int64_t *)malloc(nc * sizeof(int64_t));
+    if (!nb) return -1;
+    for (size_t k = 0; k < r->len; k++)
+        nb[k] = r->buf[(r->head + k) & (r->cap - 1)];
+    free(r->buf);
+    r->buf = nb; r->cap = nc; r->head = 0;
+    return 0;
+}
+
+static inline int ring_push_back(ring_t *r, int64_t v)
+{
+    if (r->len == r->cap && ring_grow(r))
+        return -1;
+    r->buf[(r->head + r->len) & (r->cap - 1)] = v;
+    r->len++;
+    return 0;
+}
+
+static inline int64_t ring_pop_back(ring_t *r)
+{
+    r->len--;
+    return r->buf[(r->head + r->len) & (r->cap - 1)];
+}
+
+static inline int64_t ring_pop_front(ring_t *r)
+{
+    int64_t v = r->buf[r->head];
+    r->head = (r->head + 1) & (r->cap - 1);
+    r->len--;
+    return v;
+}
+
+/* ------------------------------------------------------------------ */
+/* Simulator                                                          */
+/* ------------------------------------------------------------------ */
+
+enum { SCHED_BF = 0, SCHED_CILK = 1, SCHED_WF = 2,
+       SCHED_DFWSPT = 3, SCHED_DFWSRPT = 4 };
+
+/* dpar: [hop_lambda, hop_lambda_steal, lock_time, deque_lock_time,
+ *        steal_time, spawn_time, wake_latency, qop_time, cache_refill,
+ *        mem_intensity, migration_rate]
+ * ipar: [T, num_cores, num_nodes, n_tasks, scheduler, seed,
+ *        runtime_data_node(-1=none), root_node0]
+ * dout: [makespan, remote, total_exec, queue_wait]
+ * iout: [steals, failed_probes]
+ * returns 0 on success, negative on allocation failure.
+ */
+int sim_run(const double *dpar, const int64_t *ipar,
+            const double *wp, const double *wpo,
+            const double *fr, const double *fp,
+            const int64_t *fc, const int64_t *nc,
+            const int64_t *fpw, const int64_t *npw,
+            const int64_t *par,
+            const int64_t *core_node, const int64_t *node_dist,
+            const double *root_dist,
+            int64_t *cores,
+            const int64_t *pri_orders,   /* T*(T-1), dfwspt only */
+            const int64_t *grp_counts,   /* T, dfwsrpt only */
+            const int64_t *grp_sizes,    /* sum(grp_counts) */
+            const int64_t *grp_victims,  /* T*(T-1) */
+            double *dout, int64_t *iout)
+{
+    const double hop_lambda = dpar[0], hop_lambda_steal = dpar[1];
+    const double lock_time = dpar[2], deque_lock_time = dpar[3];
+    const double steal_time = dpar[4], spawn_time = dpar[5];
+    const double wake_latency = dpar[6], qop_time = dpar[7];
+    const double cache_refill = dpar[8], mem_intensity = dpar[9];
+    const double migration_rate = dpar[10];
+    const int64_t T = ipar[0], num_cores = ipar[1], NN = ipar[2];
+    const int64_t n_tasks = ipar[3];
+    const int sched = (int)ipar[4];
+    const uint32_t seed = (uint32_t)ipar[5];
+    const int64_t rdn = ipar[6];
+    const int64_t rnode0 = ipar[7];
+    const int depth_first = sched != SCHED_BF;
+    const int wf_like = (sched == SCHED_WF || sched == SCHED_DFWSPT ||
+                         sched == SCHED_DFWSRPT);
+    const double mu_lam = mem_intensity * hop_lambda;
+
+    int rc = -1;
+    rk_state rng;
+    rk_seed(&rng, seed);
+
+    /* per-thread group offsets for dfwsrpt */
+    int64_t *grp_off = NULL, *vic_off = NULL;
+    if (sched == SCHED_DFWSRPT) {
+        grp_off = (int64_t *)malloc((size_t)(T + 1) * sizeof(int64_t));
+        vic_off = (int64_t *)malloc((size_t)(T + 1) * sizeof(int64_t));
+        if (!grp_off || !vic_off) goto fail0;
+        grp_off[0] = 0; vic_off[0] = 0;
+        for (int64_t th = 0; th < T; th++) {
+            grp_off[th + 1] = grp_off[th] + grp_counts[th];
+            int64_t nv = 0;
+            for (int64_t g = grp_off[th]; g < grp_off[th + 1]; g++)
+                nv += grp_sizes[g];
+            vic_off[th + 1] = vic_off[th] + nv;
+        }
+    }
+
+    int64_t *pending = (int64_t *)calloc((size_t)n_tasks, sizeof(int64_t));
+    int64_t *exec_node = (int64_t *)calloc((size_t)n_tasks, sizeof(int64_t));
+    uint8_t *phase = (uint8_t *)calloc((size_t)n_tasks, 1);
+    int64_t *order = (int64_t *)malloc((size_t)(T > 1 ? T : 1) * sizeof(int64_t));
+    double *dl_free = (double *)calloc((size_t)T, sizeof(double));
+    ring_t *local = (ring_t *)calloc((size_t)T, sizeof(ring_t));
+    if (!pending || !exec_node || !phase || !order || !dl_free || !local)
+        goto fail1;
+    for (int64_t i = 0; i < T; i++)
+        if (ring_init(&local[i], 256)) goto fail1;
+    ring_t shared;
+    if (ring_init(&shared, 1024)) goto fail1;
+    heap_t evq;
+    if (heap_init(&evq, (size_t)(2 * T + 8))) goto fail2;
+    pyset_t parked;
+    if (pyset_init(&parked)) goto fail3;
+
+    double sl_free = 0.0, sl_waited = 0.0;
+    double remote = 0.0, total_exec = 0.0, makespan = 0.0;
+    int64_t steals = 0, failed = 0, live = 1;
+    uint64_t seq = 0;
+
+    /* ignition: master runs the root, workers go hunting */
+    seq++; if (heap_push(&evq, 0.0, seq, 0, 0)) goto fail4;
+    for (int64_t th = 1; th < T; th++) {
+        seq++;
+        if (heap_push(&evq, 0.0, seq, (int32_t)th, -1)) goto fail4;
+    }
+
+    while (evq.len) {
+        ev_t ev = heap_pop(&evq);
+        double t = ev.t;
+        int64_t th = ev.th;
+        int64_t task = ev.task;
+
+        if (task < 0) {
+            /* ---- acquire: local pop / steal sweep / shared FIFO ---- */
+            if (depth_first) {
+                ring_t *lp = &local[th];
+                if (lp->len) {
+                    task = ring_pop_back(lp);
+                    if (rdn < 0)
+                        t += qop_time;
+                    else
+                        t += qop_time * (1.0 + hop_lambda_steal *
+                             (double)node_dist[core_node[cores[th]] * NN + rdn]);
+                } else {
+                    int64_t n_order = 0;
+                    if (sched == SCHED_DFWSPT) {
+                        const int64_t *po = pri_orders + th * (T - 1);
+                        for (int64_t k = 0; k < T - 1; k++)
+                            order[k] = po[k];
+                        n_order = T - 1;
+                    } else if (sched == SCHED_DFWSRPT) {
+                        const int64_t *vics = grp_victims + vic_off[th];
+                        int64_t pos = 0;
+                        for (int64_t g = grp_off[th]; g < grp_off[th + 1]; g++) {
+                            int64_t gs = grp_sizes[g];
+                            for (int64_t k = 0; k < gs; k++)
+                                order[pos + k] = vics[pos + k];
+                            rk_shuffle(&rng, order + pos, gs);
+                            pos += gs;
+                        }
+                        n_order = pos;
+                    } else { /* cilk, wf: fresh random order of all others */
+                        for (int64_t v = 0, k = 0; v < T; v++)
+                            if (v != th)
+                                order[k++] = v;
+                        n_order = T - 1;
+                        rk_shuffle(&rng, order, n_order);
+                    }
+                    task = -1;
+                    const int64_t tn = core_node[cores[th]];
+                    for (int64_t k = 0; k < n_order; k++) {
+                        int64_t v = order[k];
+                        double d = (rdn < 0)
+                            ? (double)node_dist[tn * NN + core_node[cores[v]]]
+                            : (double)node_dist[tn * NN + rdn];
+                        t += steal_time * (1.0 + hop_lambda_steal * d);
+                        ring_t *lv = &local[v];
+                        if (lv->len) {
+                            double start = t > dl_free[v] ? t : dl_free[v];
+                            t = start + deque_lock_time;
+                            dl_free[v] = t;
+                            steals++;
+                            task = ring_pop_front(lv);
+                            break;
+                        }
+                        failed++;
+                    }
+                    if (task < 0) {
+                        if (live > 0 && pyset_add(&parked, th)) goto fail4;
+                        continue;
+                    }
+                }
+            } else {
+                /* breadth-first shared FIFO behind one lock */
+                if (!shared.len) {
+                    if (live > 0 && pyset_add(&parked, th)) goto fail4;
+                    continue;
+                }
+                double start = t > sl_free ? t : sl_free;
+                sl_waited += start - t;
+                t = start + lock_time;
+                sl_free = t;
+                if (!shared.len) {
+                    if (live > 0 && pyset_add(&parked, th)) goto fail4;
+                    continue;
+                }
+                task = ring_pop_front(&shared);
+            }
+        }
+
+        /* ---- run `task` on thread th at time t ---- */
+        if (migration_rate > 0.0 && rk_double(&rng) < migration_rate) {
+            /* randint(1) is special-cased by numpy: no draw consumed */
+            cores[th] = (num_cores > 1)
+                ? (int64_t)rk_interval(&rng, (uint32_t)(num_cores - 1)) : 0;
+            t += cache_refill;
+        }
+        const int64_t core = cores[th];
+        const int64_t n = core_node[core];
+        exec_node[task] = n;
+        const int64_t pr = par[task];
+        const int64_t pn = pr >= 0 ? exec_node[pr] : rnode0;
+        double pen = mu_lam * (fr[task] * root_dist[n] +
+                               fp[task] * (double)node_dist[n * NN + pn]);
+        double w = wp[task];
+        double cost = w * (1.0 + pen);
+        remote += w * pen;
+        total_exec += cost;
+        t += cost;
+
+        const int64_t nk = nc[task];
+        if (nk) {
+            const int64_t base = fc[task];
+            pending[task] = nk;
+            live += nk;
+            t += spawn_time * (double)nk;
+            double qc = (rdn < 0) ? qop_time
+                : qop_time * (1.0 + hop_lambda_steal *
+                              (double)node_dist[n * NN + rdn]);
+            if (wf_like) {
+                /* dive into first child; queue the rest newest-first */
+                ring_t *lp = &local[th];
+                for (int64_t k = base + nk - 1; k > base; k--) {
+                    t += qc;
+                    if (ring_push_back(lp, k)) goto fail4;
+                    if (parked.used) {
+                        seq++;
+                        if (heap_push(&evq, t + wake_latency, seq,
+                                      (int32_t)pyset_pop(&parked), -1))
+                            goto fail4;
+                    }
+                }
+                seq++;
+                if (heap_push(&evq, t, seq, (int32_t)th, base)) goto fail4;
+                continue;
+            }
+            if (depth_first) { /* cilk: queue all, re-acquire own front */
+                ring_t *lp = &local[th];
+                for (int64_t k = base + nk - 1; k >= base; k--) {
+                    t += qc;
+                    if (ring_push_back(lp, k)) goto fail4;
+                    if (parked.used) {
+                        seq++;
+                        if (heap_push(&evq, t + wake_latency, seq,
+                                      (int32_t)pyset_pop(&parked), -1))
+                            goto fail4;
+                    }
+                }
+            } else { /* bf: shared FIFO in spawn order */
+                for (int64_t k = base; k < base + nk; k++) {
+                    double start = t > sl_free ? t : sl_free;
+                    sl_waited += start - t;
+                    t = start + lock_time;
+                    sl_free = t;
+                    if (ring_push_back(&shared, k)) goto fail4;
+                    if (parked.used) {
+                        seq++;
+                        if (heap_push(&evq, t + wake_latency, seq,
+                                      (int32_t)pyset_pop(&parked), -1))
+                            goto fail4;
+                    }
+                }
+            }
+            seq++;
+            if (heap_push(&evq, t, seq, (int32_t)th, -1)) goto fail4;
+            continue;
+        }
+
+        /* ---- leaf: propagate completion up the tree ---- */
+        live--;
+        int64_t node = task;
+        while (1) {
+            int64_t parent = par[node];
+            if (parent < 0)
+                break;
+            int64_t pd = --pending[parent];
+            if (pd > 0)
+                break;
+            if (phase[parent] == 0 && npw[parent]) {
+                /* taskwait passed: spawn the parallel combine wave */
+                phase[parent] = 1;
+                int64_t k = npw[parent];
+                int64_t fp0 = fpw[parent];
+                pending[parent] = k;
+                live += k;
+                t += spawn_time * (double)k;
+                if (depth_first) {
+                    double qc = (rdn < 0) ? qop_time
+                        : qop_time * (1.0 + hop_lambda_steal *
+                                      (double)node_dist[core_node[cores[th]] * NN + rdn]);
+                    ring_t *lp = &local[th];
+                    for (int64_t j = fp0 + k - 1; j >= fp0; j--) {
+                        t += qc;
+                        if (ring_push_back(lp, j)) goto fail4;
+                        if (parked.used) {
+                            seq++;
+                            if (heap_push(&evq, t + wake_latency, seq,
+                                          (int32_t)pyset_pop(&parked), -1))
+                                goto fail4;
+                        }
+                    }
+                } else {
+                    for (int64_t j = fp0 + k - 1; j >= fp0; j--) {
+                        double start = t > sl_free ? t : sl_free;
+                        sl_waited += start - t;
+                        t = start + lock_time;
+                        sl_free = t;
+                        if (ring_push_back(&shared, j)) goto fail4;
+                        if (parked.used) {
+                            seq++;
+                            if (heap_push(&evq, t + wake_latency, seq,
+                                          (int32_t)pyset_pop(&parked), -1))
+                                goto fail4;
+                        }
+                    }
+                }
+                break;
+            }
+            double w2 = wpo[parent];
+            if (w2 > 0.0) {
+                /* join continuation with the parent's locality profile */
+                int64_t pn2 = exec_node[parent];
+                double pen2 = mu_lam * (fr[parent] * root_dist[n] +
+                                        fp[parent] * (double)node_dist[n * NN + pn2]);
+                double c2 = w2 * (1.0 + pen2);
+                remote += w2 * pen2;
+                total_exec += c2;
+                t += c2;
+            }
+            node = parent;
+        }
+        if (t > makespan)
+            makespan = t;
+        seq++;
+        if (heap_push(&evq, t, seq, (int32_t)th, -1)) goto fail4;
+    }
+
+    dout[0] = makespan;
+    dout[1] = remote;
+    dout[2] = total_exec;
+    dout[3] = sl_waited;
+    iout[0] = steals;
+    iout[1] = failed;
+    rc = 0;
+
+fail4:
+    pyset_free(&parked);
+fail3:
+    free(evq.e);
+fail2:
+    free(shared.buf);
+fail1:
+    if (local)
+        for (int64_t i = 0; i < T; i++)
+            free(local[i].buf);
+    free(local); free(dl_free); free(order);
+    free(phase); free(exec_node); free(pending);
+fail0:
+    free(vic_off); free(grp_off);
+    return rc;
+}
+
+/* ------------------------------------------------------------------ */
+/* Self-test hooks (used by the test suite to fuzz the replicas)      */
+/* ------------------------------------------------------------------ */
+
+/* Raw MT draws, to compare against numpy's randint(0, 2**32, uint32). */
+void mt_selftest(uint32_t seed, int64_t n, uint32_t *out)
+{
+    rk_state st;
+    rk_seed(&st, seed);
+    for (int64_t i = 0; i < n; i++)
+        out[i] = rk_random(&st);
+}
+
+/* Shuffle replica: shuffles arange(n) repeatedly, writing each result. */
+void shuffle_selftest(uint32_t seed, int64_t n, int64_t reps, int64_t *out)
+{
+    rk_state st;
+    rk_seed(&st, seed);
+    for (int64_t r = 0; r < reps; r++) {
+        int64_t *row = out + r * n;
+        for (int64_t i = 0; i < n; i++)
+            row[i] = i;
+        rk_shuffle(&st, row, n);
+    }
+}
+
+/* Set replica: ops[i] >= 0 -> add(ops[i]); ops[i] == -1 -> pop.
+ * Popped values are appended to out; returns number of pops. */
+int64_t set_selftest(int64_t nops, const int64_t *ops, int64_t *out)
+{
+    pyset_t s;
+    if (pyset_init(&s))
+        return -1;
+    int64_t npop = 0;
+    for (int64_t i = 0; i < nops; i++) {
+        if (ops[i] >= 0) {
+            if (pyset_add(&s, ops[i])) { pyset_free(&s); return -1; }
+        } else if (s.used) {
+            out[npop++] = pyset_pop(&s);
+        }
+    }
+    pyset_free(&s);
+    return npop;
+}

@@ -1,0 +1,156 @@
+"""Build/load machinery for the C simulation kernel (_csim.c).
+
+The kernel is compiled on first use with the system C compiler into a
+cache directory keyed by the source hash, then loaded via ctypes. When
+no compiler (or loading) is available the caller falls back to the
+pure-Python engine — same results, slower. Set ``REPRO_SIM_ENGINE`` to
+``py`` / ``c`` / ``auto`` (default) to force a path.
+
+IMPORTANT: ``-ffp-contract=off`` is required — FMA contraction would
+change float results and break bit-parity with the Python engine.
+"""
+
+from __future__ import annotations
+
+import ctypes as ct
+import hashlib
+import os
+import shutil
+import subprocess
+import tempfile
+
+import numpy as np
+
+_SRC = os.path.join(os.path.dirname(__file__), "_csim.c")
+_CFLAGS = ["-O2", "-fPIC", "-shared", "-ffp-contract=off"]
+
+_lib = None
+_load_attempted = False
+load_error: str | None = None
+
+_f64p = np.ctypeslib.ndpointer(np.float64, flags="C_CONTIGUOUS")
+_i64p = np.ctypeslib.ndpointer(np.int64, flags="C_CONTIGUOUS")
+_u32p = np.ctypeslib.ndpointer(np.uint32, flags="C_CONTIGUOUS")
+
+
+def _cache_dir() -> str:
+    base = os.environ.get("XDG_CACHE_HOME") or os.path.join(
+        os.path.expanduser("~"), ".cache")
+    return os.path.join(base, "repro-sim")
+
+
+def _build() -> str:
+    with open(_SRC, "rb") as f:
+        src = f.read()
+    tag = hashlib.sha1(src + " ".join(_CFLAGS).encode()).hexdigest()[:16]
+    out = os.path.join(_cache_dir(), f"csim_{tag}.so")
+    if os.path.exists(out):
+        return out
+    cc = os.environ.get("CC") or shutil.which("cc") or shutil.which("gcc")
+    if cc is None:
+        raise RuntimeError("no C compiler found")
+    os.makedirs(_cache_dir(), exist_ok=True)
+    fd, tmp = tempfile.mkstemp(suffix=".so", dir=_cache_dir())
+    os.close(fd)
+    try:
+        subprocess.run([cc, *_CFLAGS, _SRC, "-o", tmp],
+                       check=True, capture_output=True, timeout=120)
+        os.replace(tmp, out)  # atomic: concurrent builders race safely
+    finally:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+    return out
+
+
+def load():
+    """Returns the loaded library or None (with load_error set)."""
+    global _lib, _load_attempted, load_error
+    if _load_attempted:
+        return _lib
+    _load_attempted = True
+    try:
+        lib = ct.CDLL(_build())
+        lib.sim_run.restype = ct.c_int
+        lib.sim_run.argtypes = [
+            _f64p, _i64p,                     # dpar, ipar
+            _f64p, _f64p, _f64p, _f64p,       # wp, wpo, fr, fp
+            _i64p, _i64p, _i64p, _i64p, _i64p,  # fc, nc, fpw, npw, par
+            _i64p, _i64p, _f64p,              # core_node, node_dist, root_dist
+            _i64p,                            # cores (in/out)
+            ct.c_void_p, ct.c_void_p, ct.c_void_p, ct.c_void_p,  # orders
+            _f64p, _i64p,                     # dout, iout
+        ]
+        lib.mt_selftest.restype = None
+        lib.mt_selftest.argtypes = [ct.c_uint32, ct.c_int64, _u32p]
+        lib.shuffle_selftest.restype = None
+        lib.shuffle_selftest.argtypes = [ct.c_uint32, ct.c_int64,
+                                         ct.c_int64, _i64p]
+        lib.set_selftest.restype = ct.c_int64
+        lib.set_selftest.argtypes = [ct.c_int64, _i64p, _i64p]
+        _lib = lib
+    except Exception as e:  # no compiler, sandboxed cc, bad toolchain, ...
+        load_error = f"{type(e).__name__}: {e}"
+        _lib = None
+    return _lib
+
+
+def _ptr(arr):
+    return None if arr is None else arr.ctypes.data_as(ct.c_void_p)
+
+
+SCHED_IDS = {"bf": 0, "cilk": 1, "wf": 2, "dfwspt": 3, "dfwsrpt": 4}
+
+
+def run(ctx) -> dict:
+    """Run the C kernel on a prepared simulation context (see runtime)."""
+    lib = load()
+    assert lib is not None
+    tbl = ctx["table"]
+    T = ctx["T"]
+    dpar = np.array([
+        ctx["hop_lambda"], ctx["hop_lambda_steal"], ctx["lock_time"],
+        ctx["deque_lock_time"], ctx["steal_time"], ctx["spawn_time"],
+        ctx["wake_latency"], ctx["qop_time"], ctx["cache_refill"],
+        ctx["mem_intensity"], ctx["migration_rate"],
+    ], dtype=np.float64)
+    rdn = ctx["runtime_data_node"]
+    ipar = np.array([
+        T, ctx["num_cores"], ctx["num_nodes"], tbl.n,
+        SCHED_IDS[ctx["scheduler"]], ctx["seed"],
+        -1 if rdn is None else int(rdn), ctx["root_node0"],
+    ], dtype=np.int64)
+    cores = np.ascontiguousarray(ctx["cores"], dtype=np.int64)
+    dout = np.zeros(4, dtype=np.float64)
+    iout = np.zeros(2, dtype=np.int64)
+
+    sched = ctx["scheduler"]
+    pri = grp_counts = grp_sizes = grp_victims = None
+    if sched == "dfwspt":
+        pri = np.ascontiguousarray(
+            [v for row in ctx["pri_orders"] for v in row], dtype=np.int64)
+    elif sched == "dfwsrpt":
+        counts, sizes, victims = [], [], []
+        for groups in ctx["dist_groups"]:
+            counts.append(len(groups))
+            for g in groups:
+                sizes.append(len(g))
+                victims.extend(g)
+        grp_counts = np.ascontiguousarray(counts, dtype=np.int64)
+        grp_sizes = np.ascontiguousarray(sizes, dtype=np.int64)
+        grp_victims = np.ascontiguousarray(victims, dtype=np.int64)
+
+    rc = lib.sim_run(
+        dpar, ipar,
+        tbl.work_pre, tbl.work_post, tbl.f_root, tbl.f_parent,
+        tbl.first_child, tbl.num_children, tbl.first_post, tbl.num_post,
+        tbl.parent,
+        ctx["core_node_arr"], ctx["node_dist_flat"], ctx["root_dist"],
+        cores,
+        _ptr(pri), _ptr(grp_counts), _ptr(grp_sizes), _ptr(grp_victims),
+        dout, iout)
+    if rc != 0:
+        raise MemoryError(f"C sim kernel failed with code {rc}")
+    ctx["cores"][:] = [int(c) for c in cores]  # migration mutates bindings
+    return dict(makespan=float(dout[0]), remote=float(dout[1]),
+                total_exec=float(dout[2]), queue_wait=float(dout[3]),
+                steals=int(iout[0]), failed=int(iout[1]))

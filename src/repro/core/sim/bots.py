@@ -17,9 +17,15 @@ from __future__ import annotations
 import numpy as np
 
 from .runtime import TaskSpec, Workload
+from .table import table_from_arrays
 
 __all__ = ["fft", "sort", "strassen", "nqueens", "floorplan", "sparselu",
-           "WORKLOADS", "make"]
+           "fft_flat", "sort_flat", "strassen_flat",
+           "WORKLOADS", "make", "PAPER_MIN_TASKS"]
+
+# the paper-scale tier targets BOTS-like task counts (FFT medium spawns
+# ~10M tasks); anything above this floor exercises the same regimes.
+PAPER_MIN_TASKS = 1_000_000
 
 
 def _wave(total_work: float, chunk: float, f_root: float,
@@ -135,14 +141,142 @@ def sparselu(n: int = 20) -> Workload:
     return Workload("sparselu", step(n - 1), mem_intensity=0.7)
 
 
+# ----------------------------------------------------------------------
+# Flat (iterative, tree-free) CSR builders for paper-scale task counts.
+#
+# The divide-and-conquer benchmarks above are *uniform*: every node at a
+# given recursion level has identical work/profile/fan-out, so the whole
+# CSR table can be laid out level-by-level with numpy tiling — no
+# TaskSpec objects, no recursion, millions of tasks in ~a second. For
+# identical parameters these produce tables exactly equal to
+# ``compile_tree`` of the recursive builders (covered by tests).
+# ----------------------------------------------------------------------
+
+
+def _uniform_flat(levels: list[dict], leaf: dict,
+                  mem_intensity: float, name: str) -> Workload:
+    """Build a Workload table for a uniform recursive tree.
+
+    ``levels[k]`` describes the internal nodes at depth k:
+      wp, wpo, fr, fp   — the node's own scalars,
+      nch               — number of recursive children,
+      nw, wave_w, wave_fr, wave_fp — its post-taskwait combine wave.
+    ``leaf`` (wp, fr, fp) describes the nodes below the last level.
+
+    Ids are assigned in BFS block order (matching ``compile_tree``):
+    after the root, each node's block is [children..., wave...], blocks
+    in parent-id order. A node's expansion block depends only on its
+    level, so every per-level segment is one numpy tile.
+    """
+    if not levels:
+        return Workload(name, None, mem_intensity, table=table_from_arrays(
+            np.array([leaf["wp"]]), np.zeros(1),
+            np.array([leaf["fr"]]), np.array([leaf["fp"]]),
+            np.zeros(1, np.int64), np.zeros(1, np.int64)))
+    lv0 = levels[0]
+    seg_wp = [np.array([lv0["wp"]])]
+    seg_wpo = [np.array([lv0["wpo"]])]
+    seg_fr = [np.array([lv0["fr"]])]
+    seg_fp = [np.array([lv0["fp"]])]
+    seg_nc = [np.array([lv0["nch"]], np.int64)]
+    seg_npw = [np.array([lv0["nw"]], np.int64)]
+    count = 1
+    for k, lv in enumerate(levels):
+        child = levels[k + 1] if k + 1 < len(levels) else None
+        nch, nw = lv["nch"], lv["nw"]
+        if child is not None:
+            c_wp, c_wpo = child["wp"], child["wpo"]
+            c_fr, c_fp = child["fr"], child["fp"]
+            c_nc, c_npw = child["nch"], child["nw"]
+        else:
+            c_wp, c_wpo = leaf["wp"], 0.0
+            c_fr, c_fp = leaf["fr"], leaf["fp"]
+            c_nc = c_npw = 0
+        pat = lambda c_val, w_val, dt=np.float64: np.tile(
+            np.array([c_val] * nch + [w_val] * nw, dtype=dt), count)
+        seg_wp.append(pat(c_wp, lv["wave_w"]))
+        seg_wpo.append(pat(c_wpo, 0.0))
+        seg_fr.append(pat(c_fr, lv["wave_fr"]))
+        seg_fp.append(pat(c_fp, lv["wave_fp"]))
+        seg_nc.append(pat(c_nc, 0, np.int64))
+        seg_npw.append(pat(c_npw, 0, np.int64))
+        count *= nch
+    tbl = table_from_arrays(
+        np.concatenate(seg_wp), np.concatenate(seg_wpo),
+        np.concatenate(seg_fr), np.concatenate(seg_fp),
+        np.concatenate(seg_nc), np.concatenate(seg_npw))
+    return Workload(name, None, mem_intensity, table=tbl)
+
+
+def _wave_count(total_work: float, chunk: float) -> int:
+    return max(1, int(round(total_work / chunk)))
+
+
+def fft_flat(n: int = 1 << 21, cutoff: int = 1 << 3) -> Workload:
+    """Flat-table twin of :func:`fft` (same structure, no TaskSpec tree)."""
+    levels = []
+    m = n
+    while m > cutoff:
+        total = 1.0 * m
+        nw = _wave_count(total, 4.0 * cutoff)
+        levels.append(dict(wp=0.1 * m, wpo=0.05 * m, fr=0.8, fp=0.2,
+                           nch=2, nw=nw, wave_w=total / nw,
+                           wave_fr=0.8, wave_fp=0.2))
+        m //= 2
+    leaf = dict(wp=m * np.log2(max(m, 2)), fr=0.75, fp=0.25)
+    return _uniform_flat(levels, leaf, mem_intensity=0.9, name="fft")
+
+
+def sort_flat(n: int = 1 << 22, cutoff: int = 1 << 4) -> Workload:
+    """Flat-table twin of :func:`sort`."""
+    levels = []
+    m = n
+    while m > cutoff:
+        total = 1.2 * m
+        nw = _wave_count(total, 4.0 * cutoff)
+        levels.append(dict(wp=0.05 * m, wpo=0.05 * m, fr=0.75, fp=0.25,
+                           nch=4, nw=nw, wave_w=total / nw,
+                           wave_fr=0.75, wave_fp=0.25))
+        m //= 4
+    leaf = dict(wp=m * np.log2(max(m, 2)), fr=0.7, fp=0.3)
+    return _uniform_flat(levels, leaf, mem_intensity=0.8, name="sort")
+
+
+def strassen_flat(depth: int = 6, base_work: float = 512.0) -> Workload:
+    """Flat-table twin of :func:`strassen`."""
+    levels = []
+    for d in range(depth, 0, -1):  # root has d == depth
+        area = 4.0 ** (depth - d)
+        total = 2.0 * area
+        nw = _wave_count(total, 32.0)
+        levels.append(dict(wp=0.3 * area, wpo=0.05 * area, fr=0.4, fp=0.6,
+                           nch=7, nw=nw, wave_w=total / nw,
+                           wave_fr=0.4, wave_fp=0.6))
+    leaf = dict(wp=base_work, fr=0.45, fp=0.55)
+    return _uniform_flat(levels, leaf, mem_intensity=0.85, name="strassen")
+
+
 WORKLOADS = {
     "fft": fft, "sort": sort, "strassen": strassen,
     "nqueens": nqueens, "floorplan": floorplan, "sparselu": sparselu,
 }
 
+PAPER_BUILDERS = {
+    "fft": fft_flat, "sort": sort_flat, "strassen": strassen_flat,
+}
+
 
 def make(name: str, scale: str = "medium") -> Workload:
-    """Scaled instances. 'medium'/'large' mirror the paper's input sets."""
+    """Scaled instances. 'medium'/'large' mirror the paper's input sets;
+    'paper' builds flat tables at BOTS-like task counts (≥1M tasks) for
+    the data-intensive benchmarks."""
+    if scale == "paper":
+        builder = PAPER_BUILDERS.get(name)
+        if builder is None:
+            raise ValueError(
+                f"no paper-scale tier for {name!r}; available: "
+                f"{sorted(PAPER_BUILDERS)}")
+        return builder()
     if name == "fft":
         return fft(n=(1 << 15) if scale == "medium" else (1 << 16))
     if name == "sort":

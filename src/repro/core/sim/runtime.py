@@ -29,49 +29,39 @@ Machine/cost model (constants in :class:`SimParams`):
   lives in the victim's node memory.
 
 The simulator is deterministic given (workload, params, seed).
+
+Engine architecture (this module is the public API):
+
+* :class:`TaskSpec` trees are compiled once per workload into a flat
+  CSR :class:`TaskTable` (structure-of-arrays; see ``table.py``) and
+  cached on the :class:`Workload`. Paper-scale workloads (millions of
+  tasks) are built directly as tables without ever materializing a
+  Python tree (see ``bots.make(name, "paper")``).
+* the event loop runs either in a compiled C kernel (``_csim``;
+  built on demand, ~100x the seed engine) or a pure-Python flat loop
+  (``_engine_py``). Both preserve the seed engine's behavior exactly —
+  same rng draw sequence, same event ordering, same float association —
+  and are pinned by golden-parity fixtures recorded from the seed.
+  Select with ``REPRO_SIM_ENGINE={auto,c,py}`` (default auto).
 """
 
 from __future__ import annotations
 
 import dataclasses
-import heapq
-from typing import Callable, Optional, Sequence
+import os
+from typing import Optional, Sequence
 
 import numpy as np
 
 from ..topology import Topology
 from ..stealing import victim_order
+from . import _csim, _engine_py
+from .table import TaskTable, compile_tree
 
 __all__ = [
     "TaskSpec", "Workload", "SimParams", "SimResult", "simulate",
-    "serial_time", "SCHEDULERS",
+    "serial_time", "SCHEDULERS", "TaskTable", "ensure_table",
 ]
-
-
-def serial_time(topo: "Topology", workload: "Workload", core: int,
-                root_data_nodes, params: "SimParams | None" = None) -> float:
-    """Single-thread execution time on ``core`` under the NUMA cost model.
-
-    Depth-first on one core ⇒ parent data always local (d_parent = 0);
-    only the root-array distance (incl. spill interleave) is paid.
-    """
-    p = params or SimParams()
-    if root_data_nodes is None:
-        root_data_nodes = [int(topo.core_node[core])]
-    elif isinstance(root_data_nodes, (int, np.integer)):
-        root_data_nodes = [int(root_data_nodes)]
-    d_root = float(topo.node_distance[:, list(root_data_nodes)]
-                   .mean(axis=1)[topo.core_node[core]])
-    total = 0.0
-    stack = [workload.root]
-    while stack:
-        s = stack.pop()
-        w = s.work_pre + s.work_post
-        total += w * (1.0 + workload.mem_intensity * p.hop_lambda
-                      * s.f_root * d_root)
-        stack.extend(s.children)
-        stack.extend(s.post_children)
-    return total
 
 SCHEDULERS = ("bf", "cilk", "wf", "dfwspt", "dfwsrpt")
 
@@ -118,8 +108,23 @@ class TaskSpec:
 @dataclasses.dataclass
 class Workload:
     name: str
-    root: TaskSpec
+    root: Optional[TaskSpec]
     mem_intensity: float  # µ — how memory-bound the benchmark is (0..~1)
+    # compiled flat form; populated lazily from ``root`` (cached), or
+    # directly by the paper-scale builders (which have no tree).
+    table: Optional[TaskTable] = None
+
+
+def ensure_table(workload: Workload) -> TaskTable:
+    """Compile (once) and return the workload's flat task table."""
+    tbl = workload.table
+    if tbl is None:
+        if workload.root is None:
+            raise ValueError(f"workload {workload.name!r} has neither a "
+                             "task tree nor a compiled table")
+        tbl = compile_tree(workload.root)
+        workload.table = tbl
+    return tbl
 
 
 @dataclasses.dataclass
@@ -147,39 +152,80 @@ class SimResult:
     queue_wait: float            # total time spent waiting on the bf lock
 
 
-# ----------------------------------------------------------------------
-# Internal runtime records
-# ----------------------------------------------------------------------
+def _root_data_setup(topo: Topology, core: int, root_data_nodes):
+    """Normalize ``root_data_nodes`` and compute per-node mean distance.
 
-class _Run:
-    """A live task instance."""
-    __slots__ = ("spec", "parent", "pending", "exec_node", "parent_node",
-                 "phase")
+    None → the node of ``core`` (Linux first-touch by the master thread);
+    int → a single explicit node. Large inputs spill over several nodes
+    and pages are interleaved over the spill set, so the access distance
+    is the mean over it (paper §V.B).
+    """
+    if root_data_nodes is None:
+        root_data_nodes = [int(topo.core_node[core])]
+    elif isinstance(root_data_nodes, (int, np.integer)):
+        root_data_nodes = [int(root_data_nodes)]
+    else:
+        root_data_nodes = list(root_data_nodes)
+    root_dist = topo.node_distance[:, root_data_nodes].mean(axis=1)
+    return root_data_nodes, root_dist
 
-    def __init__(self, spec: TaskSpec, parent: Optional["_Run"], parent_node: int):
-        self.spec = spec
-        self.parent = parent
-        self.pending = 0           # children not yet fully complete
-        self.exec_node = -1        # node where work_pre ran (first touch)
-        self.parent_node = parent_node
-        self.phase = 0             # 0 = children wave, 1 = post wave
+
+def serial_time(topo: Topology, workload: Workload, core: int,
+                root_data_nodes, params: "SimParams | None" = None) -> float:
+    """Single-thread execution time on ``core`` under the NUMA cost model.
+
+    Depth-first on one core ⇒ parent data always local (d_parent = 0);
+    only the root-array distance (incl. spill interleave) is paid.
+
+    The traversal runs over the compiled task table in the same stack
+    order as the original tree walk (bit-identical sum), and the result
+    is cached on the table per (distance, µ, λ) key — benchmark drivers
+    call this with identical arguments hundreds of times.
+    """
+    p = params or SimParams()
+    _, root_dist = _root_data_setup(topo, core, root_data_nodes)
+    d_root = float(root_dist[topo.core_node[core]])
+    tbl = ensure_table(workload)
+    key = (d_root, workload.mem_intensity, p.hop_lambda)
+    cached = tbl._serial_cache.get(key)
+    if cached is not None:
+        return cached
+    mu_lam = workload.mem_intensity * p.hop_lambda
+    coef = [(mu_lam * fr) * d_root for fr in tbl.cls_f_root.tolist()]
+    wp_l, wpo_l, fc_l, nc_l, fpw_l, npw_l, _, cls_l = tbl.lists()
+    total = 0.0
+    stack = [0]
+    pop = stack.pop
+    extend = stack.extend
+    while stack:
+        i = pop()
+        total += (wp_l[i] + wpo_l[i]) * (1.0 + coef[cls_l[i]])
+        nk = nc_l[i]
+        if nk:
+            base = fc_l[i]
+            extend(range(base, base + nk))
+        kp = npw_l[i]
+        if kp:
+            base = fpw_l[i]
+            extend(range(base, base + kp))
+    tbl._serial_cache[key] = total
+    return total
 
 
-class _Serialized:
-    """A lock: serialized access, each op occupies ``op_time``."""
-    __slots__ = ("free_at", "op_time", "waited")
-
-    def __init__(self, op_time: float):
-        self.free_at = 0.0
-        self.op_time = op_time
-        self.waited = 0.0
-
-    def acquire(self, t: float) -> float:
-        """Returns the time the op *completes*; accumulates wait time."""
-        start = max(t, self.free_at)
-        self.waited += start - t
-        self.free_at = start + self.op_time
-        return self.free_at
+def _select_engine() -> str:
+    mode = os.environ.get("REPRO_SIM_ENGINE", "auto")
+    if mode == "py":
+        return "py"
+    if mode == "c":
+        if _csim.load() is None:
+            raise RuntimeError(
+                f"REPRO_SIM_ENGINE=c but the kernel is unavailable: "
+                f"{_csim.load_error}")
+        return "c"
+    if mode != "auto":
+        raise ValueError(
+            f"REPRO_SIM_ENGINE={mode!r}: expected 'auto', 'c', or 'py'")
+    return "c" if _csim.load() is not None else "py"
 
 
 def simulate(topo: Topology,
@@ -218,229 +264,74 @@ def simulate(topo: Topology,
     if scheduler not in SCHEDULERS:
         raise ValueError(f"unknown scheduler {scheduler!r}")
     p = params or SimParams()
-    rng = np.random.RandomState(seed)
     T = len(thread_cores)
+    cores = [int(c) for c in thread_cores]
+    tbl = ensure_table(workload)
     dist = topo.core_distance_matrix()
-    core_node = topo.core_node
-    node_dist = topo.node_distance
-    cores = list(thread_cores)
-    if root_data_nodes is None:
-        root_data_nodes = [int(core_node[cores[0]])]
-    elif isinstance(root_data_nodes, (int, np.integer)):
-        root_data_nodes = [int(root_data_nodes)]
-    # mean hop distance from each node to the (interleaved) root pages
-    root_dist = node_dist[:, list(root_data_nodes)].mean(axis=1)
+    root_data_nodes, root_dist = _root_data_setup(topo, cores[0],
+                                                  root_data_nodes)
 
-    depth_first = scheduler != "bf"
+    ctx: dict = dict(
+        table=tbl, T=T, cores=cores, scheduler=scheduler, seed=seed,
+        num_cores=topo.num_cores, num_nodes=topo.num_nodes,
+        core_node_arr=np.ascontiguousarray(topo.core_node, dtype=np.int64),
+        node_dist_flat=np.ascontiguousarray(topo.node_distance,
+                                            dtype=np.int64).ravel(),
+        root_dist=np.ascontiguousarray(root_dist, dtype=np.float64),
+        root_node0=int(root_data_nodes[0]),
+        runtime_data_node=runtime_data_node,
+        migration_rate=migration_rate,
+        mem_intensity=workload.mem_intensity,
+        hop_lambda=p.hop_lambda, hop_lambda_steal=p.hop_lambda_steal,
+        lock_time=p.lock_time, deque_lock_time=p.deque_lock_time,
+        steal_time=p.steal_time, spawn_time=p.spawn_time,
+        wake_latency=p.wake_latency, qop_time=p.qop_time,
+        cache_refill=p.cache_refill,
+    )
+
     # Victim orders. DFWSPT's list is static; DFWSRPT re-randomizes ties
-    # (equal-distance victims) per sweep; stock cilk/wf sweep victims in a
-    # fresh random order. Distance groups are precomputed once.
-    pri_orders = None
-    dist_groups: list[list[list[int]]] = []
-    for th in range(T):
-        by_d: dict[int, list[int]] = {}
-        for v in range(T):
-            if v != th:
-                by_d.setdefault(int(dist[cores[th], cores[v]]), []).append(v)
-        dist_groups.append([by_d[d] for d in sorted(by_d)])
+    # (equal-distance victims) per sweep; stock cilk/wf sweep victims in
+    # a fresh random order. Distance groups are precomputed once, in the
+    # exact construction order of the seed engine (dict-insertion by
+    # ascending victim id within each distance).
+    rng = np.random.RandomState(seed)
+    ctx["rng"] = rng
     if scheduler == "dfwspt":
-        pri_orders = [victim_order(topo, cores, t, "dfwspt", rng) for t in range(T)]
-    all_others = [[v for v in range(T) if v != th] for th in range(T)]
+        ctx["pri_orders"] = [victim_order(topo, cores, t, "dfwspt", rng)
+                             for t in range(T)]
+    elif scheduler == "dfwsrpt":
+        dist_groups = []
+        for th in range(T):
+            by_d: dict[int, list[int]] = {}
+            for v in range(T):
+                if v != th:
+                    by_d.setdefault(int(dist[cores[th], cores[v]]),
+                                    []).append(v)
+            dist_groups.append([by_d[d] for d in sorted(by_d)])
+        ctx["dist_groups"] = dist_groups
+    elif scheduler in ("cilk", "wf"):
+        ctx["all_others"] = [[v for v in range(T) if v != th]
+                             for th in range(T)]
 
-    # --- state ---
-    local: list[list[_Run]] = [[] for _ in range(T)]  # deque per thread
-    shared: list[_Run] = []                            # bf FIFO
-    shared_lock = _Serialized(p.lock_time)
-    deque_locks = [_Serialized(p.deque_lock_time) for _ in range(T)]
-    parked: set[int] = set()
-    events: list[tuple[float, int, int, Optional[_Run]]] = []  # (t, seq, thread, task-to-run)
-    seq = 0
-    stats = dict(steals=0, failed=0, remote=0.0, total_exec=0.0)
-    live_tasks = 1  # root
-    makespan = 0.0
-
-    def push_event(t: float, thread: int, task: Optional[_Run]):
-        nonlocal seq
-        seq += 1
-        heapq.heappush(events, (t, seq, thread, task))
-
-    def exec_cost(run: _Run, core: int, work: float) -> float:
-        d_root = root_dist[core_node[core]]
-        d_par = (node_dist[core_node[core], run.parent_node]
-                 if run.parent_node >= 0 else 0)
-        s = run.spec
-        penalty = workload.mem_intensity * p.hop_lambda * (
-            s.f_root * d_root + s.f_parent * d_par)
-        stats["remote"] += work * penalty
-        stats["total_exec"] += work * (1.0 + penalty)
-        return work * (1.0 + penalty)
-
-    def qop(thread: int) -> float:
-        """Local task-pool op cost; remote if runtime data is centralized
-        (baseline Nanos first-touch — the paper's §IV-end fix removes it)."""
-        if runtime_data_node is None:
-            return p.qop_time
-        d = node_dist[core_node[cores[thread]], runtime_data_node]
-        return p.qop_time * (1.0 + p.hop_lambda_steal * d)
-
-    def deque_home_dist(thief: int, victim: int) -> float:
-        """Hop distance from thief to the victim's pool metadata."""
-        if runtime_data_node is None:
-            return float(dist[cores[thief], cores[victim]])
-        return float(node_dist[core_node[cores[thief]], runtime_data_node])
-
-    def enqueue(run: _Run, thread: int, t: float) -> float:
-        """Push a ready task; wake parked threads. Returns time after op."""
-        if depth_first:
-            t += qop(thread)
-            local[thread].append(run)  # front == end of list (LIFO pop)
-        else:
-            t = shared_lock.acquire(t)
-            shared.append(run)
-        wake(t)
-        return t
-
-    def wake(t: float):
-        # wake-one (Nanos-style): a single push readies a single sleeper.
-        if parked:
-            th = parked.pop()
-            push_event(t + p.wake_latency, th, None)
-
-    def try_acquire(thread: int, t: float) -> tuple[Optional[_Run], float]:
-        """Scheduler-policy task acquisition. May advance time."""
-        if depth_first:
-            if local[thread]:
-                return local[thread].pop(), t + qop(thread)
-            # steal sweep
-            if scheduler in ("cilk", "wf"):
-                order = list(all_others[thread])
-                rng.shuffle(order)
-            elif scheduler == "dfwspt":
-                order = pri_orders[thread]
-            else:  # dfwsrpt: re-randomize equal-distance ties each sweep
-                order = []
-                for group in dist_groups[thread]:
-                    g = list(group)
-                    rng.shuffle(g)
-                    order.extend(g)
-            for v in order:
-                t += p.steal_time * (1.0 + p.hop_lambda_steal
-                                     * deque_home_dist(thread, v))
-                if local[v]:
-                    t = deque_locks[v].acquire(t)
-                    if local[v]:
-                        stats["steals"] += 1
-                        return local[v].pop(0), t  # steal from the back
-                stats["failed"] += 1
-            return None, t
-        # breadth-first: single shared FIFO behind one lock.
-        # Peek without the lock first (cheap read) — contention comes from
-        # genuine concurrent pops, not from idle polling.
-        if not shared:
-            return None, t
-        t = shared_lock.acquire(t)
-        if shared:
-            return shared.pop(0), t
-        return None, t
-
-    def complete_subtree(run: _Run, thread: int, t: float) -> float:
-        """Propagate completion: spawn post waves / run join continuations."""
-        nonlocal live_tasks
-        node = run
-        while True:
-            parent = node.parent
-            if parent is None:
-                return t
-            parent.pending -= 1
-            if parent.pending > 0:
-                return t
-            if parent.phase == 0 and parent.spec.post_children:
-                # taskwait passed → spawn the parallel combine wave on the
-                # thread that completed the last child (depth-first: it
-                # has the hottest caches for the join data).
-                parent.phase = 1
-                kids = parent.spec.post_children
-                parent.pending = len(kids)
-                live_tasks += len(kids)
-                t += p.spawn_time * len(kids)
-                for k in kids[::-1]:
-                    t = enqueue(_Run(k, parent, parent.exec_node), thread, t)
-                return t
-            # all waves done → run parent's continuation (work_post)
-            if parent.spec.work_post > 0.0:
-                cont = _Run(parent.spec, None, parent.exec_node)
-                # continuation resumes with parent's own locality profile;
-                # completion then propagates to the grandparent.
-                cont_cost = exec_cost(cont, cores[thread], parent.spec.work_post)
-                t += cont_cost
-            node = parent
-
-    def run_task(run: _Run, thread: int, t: float):
-        nonlocal live_tasks, makespan
-        if migration_rate > 0.0 and rng.random_sample() < migration_rate:
-            # unbound baseline: OS moves the thread; caches refill cold.
-            cores[thread] = int(rng.randint(topo.num_cores))
-            t += p.cache_refill
-        core = cores[thread]
-        run.exec_node = int(core_node[core])  # first touch of its temporaries
-        t += exec_cost(run, core, run.spec.work_pre)
-        kids = run.spec.children
-        if kids:
-            run.pending = len(kids)
-            live_tasks += len(kids)
-            runs = [_Run(k, run, run.exec_node) for k in kids]
-            if scheduler == "wf" or scheduler in ("dfwspt", "dfwsrpt"):
-                # work-first: dive into the first child immediately,
-                # queue the rest (newest in front).
-                t += p.spawn_time * len(kids)
-                for r in runs[1:][::-1]:
-                    t = enqueue(r, thread, t)
-                push_event(t, thread, runs[0])
-                return
-            t += p.spawn_time * len(kids)
-            for r in runs[::-1] if depth_first else runs:
-                t = enqueue(r, thread, t)
-            # cilk-based: continue by popping own deque front (the first
-            # child) — one queue round-trip more than work-first.
-            push_event(t, thread, None)
-            return
-        # leaf (or no children): join propagation
-        live_tasks -= 1
-        t = complete_subtree(run, thread, t)
-        makespan = max(makespan, t)
-        push_event(t, thread, None)
-
-    # ignite: master (thread 0) starts the root
-    root_run = _Run(workload.root, None, int(root_data_nodes[0]))
-    push_event(0.0, 0, root_run)
-    for th in range(1, T):
-        push_event(0.0, th, None)
-
-    while events:
-        t, _, thread, task = heapq.heappop(events)
-        if task is not None:
-            run_task(task, thread, t)
-            continue
-        got, t2 = try_acquire(thread, t)
-        if got is not None:
-            run_task(got, thread, t2)
-        elif live_tasks > 0:
-            parked.add(thread)  # woken by the next enqueue
-        # else: drain — nothing left anywhere.
+    if _select_engine() == "c":
+        out = _csim.run(ctx)
+    else:
+        out = _engine_py.run(ctx)
 
     # serial reference: one thread on the master core, same data placement.
     if serial_reference is not None:
         serial = serial_reference
     else:
         serial = serial_time(topo, workload, cores[0], root_data_nodes, p)
-    rf = stats["remote"] / max(stats["total_exec"], 1e-12)
+    makespan = out["makespan"]
+    rf = out["remote"] / max(out["total_exec"], 1e-12)
     return SimResult(
         makespan=makespan,
         serial_time=serial,
         speedup=serial / makespan if makespan > 0 else float("nan"),
-        tasks=workload.root.count(),
-        steals=stats["steals"],
-        failed_probes=stats["failed"],
+        tasks=tbl.n,
+        steals=out["steals"],
+        failed_probes=out["failed"],
         remote_work_fraction=rf,
-        queue_wait=shared_lock.waited,
+        queue_wait=out["queue_wait"],
     )

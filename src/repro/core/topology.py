@@ -77,8 +77,19 @@ class Topology:
         return int(self.node_distance[self.core_node[a], self.core_node[b]])
 
     def core_distance_matrix(self) -> np.ndarray:
-        """(num_cores, num_cores) hop distances."""
-        return self.node_distance[self.core_node][:, self.core_node]
+        """(num_cores, num_cores) hop distances.
+
+        Cached on first use: the simulator and the placement/stealing
+        code all hit this on their hot setup paths, and the matrix is
+        immutable once the (frozen) topology exists. The cached array is
+        marked read-only so no caller can corrupt the shared copy.
+        """
+        m = self.__dict__.get("_core_distance_matrix")
+        if m is None:
+            m = self.node_distance[self.core_node][:, self.core_node]
+            m.flags.writeable = False
+            object.__setattr__(self, "_core_distance_matrix", m)
+        return m
 
     def max_distance(self) -> int:
         return int(self.node_distance.max())
@@ -86,12 +97,9 @@ class Topology:
     def hop_histogram(self, core: int) -> dict[int, int]:
         """Paper's N_i: number of *other* cores at each hop distance i."""
         d = self.core_distance_matrix()[core]
-        hist: dict[int, int] = {}
-        for other, dist in enumerate(d):
-            if other == core:
-                continue
-            hist[int(dist)] = hist.get(int(dist), 0) + 1
-        return hist
+        mask = np.arange(d.shape[0]) != core
+        dists, counts = np.unique(d[mask], return_counts=True)
+        return {int(k): int(v) for k, v in zip(dists, counts)}
 
     def numa_factor(self, a: int, b: int) -> float:
         """Latency ratio remote/local for cores a, b (>= 1)."""

@@ -1,0 +1,79 @@
+"""Compatibility shim for ``hypothesis`` in offline environments.
+
+The test suite uses a small subset of hypothesis (``given``/``settings``
+plus the ``integers``/``sampled_from`` strategies). The real package is
+not installable in the hermetic CI container, so when it is absent we
+degrade to a deterministic property harness: each ``@given`` test is run
+against a fixed number of pseudo-randomly drawn examples (seeded, so
+failures are reproducible), honouring ``settings(max_examples=...)``.
+
+Import through this module instead of ``hypothesis`` directly::
+
+    from _hypothesis_compat import given, settings, strategies as st
+"""
+
+from __future__ import annotations
+
+try:  # pragma: no cover - exercised only when hypothesis is installed
+    from hypothesis import given, settings, strategies  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    import random
+
+    HAVE_HYPOTHESIS = False
+    _DEFAULT_MAX_EXAMPLES = 20
+
+    class _Strategy:
+        """A draw rule: callable on a ``random.Random`` instance."""
+
+        def __init__(self, draw):
+            self._draw = draw
+
+        def example(self, rng):
+            return self._draw(rng)
+
+    class strategies:  # noqa: N801 - mirrors the hypothesis module name
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+        @staticmethod
+        def sampled_from(elements):
+            elements = list(elements)
+            return _Strategy(lambda rng: rng.choice(elements))
+
+    def settings(max_examples=_DEFAULT_MAX_EXAMPLES, **_ignored):
+        """Records max_examples on the wrapped function; other hypothesis
+        settings (deadline, ...) have no meaning in the shim."""
+
+        def deco(fn):
+            fn._compat_max_examples = max_examples
+            return fn
+
+        return deco
+
+    def given(**strategy_kwargs):
+        def deco(fn):
+            def runner(*args, **kwargs):
+                n = getattr(runner, "_compat_max_examples",
+                            getattr(fn, "_compat_max_examples",
+                                    _DEFAULT_MAX_EXAMPLES))
+                # Deterministic per-test stream: same examples every run.
+                rng = random.Random(f"compat:{fn.__module__}.{fn.__name__}")
+                for _ in range(n):
+                    drawn = {name: strat.example(rng)
+                             for name, strat in strategy_kwargs.items()}
+                    try:
+                        fn(*args, **kwargs, **drawn)
+                    except Exception as e:
+                        raise AssertionError(
+                            f"falsifying example {drawn!r}: {e}") from e
+
+            # NB: no functools.wraps — pytest would follow __wrapped__
+            # and treat the drawn parameters as fixtures.
+            runner.__name__ = fn.__name__
+            runner.__doc__ = fn.__doc__
+            runner.__module__ = fn.__module__
+            return runner
+
+        return deco

@@ -29,6 +29,7 @@ def _batch(cfg, B=2, S=16, seed=0):
     return b
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ARCHS)
 def test_train_step_smoke(arch):
     cfg = configs.get(arch).reduced()
@@ -43,6 +44,7 @@ def test_train_step_smoke(arch):
     assert np.isfinite(gnorm) and gnorm > 0
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ARCHS)
 def test_forward_shapes(arch):
     cfg = configs.get(arch).reduced()
@@ -56,6 +58,7 @@ def test_forward_shapes(arch):
     assert bool(jnp.isfinite(logits).all())
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", [a for a in ARCHS
                                   if not configs.get(a).is_encoder])
 def test_prefill_decode_consistency(arch):

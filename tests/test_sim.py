@@ -4,7 +4,7 @@ allocation gains, scheduler ordering)."""
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core import placement, priority, topology
 from repro.core.sim import (SimParams, bots, serial_time, simulate,

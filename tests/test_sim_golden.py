@@ -1,0 +1,233 @@
+"""Golden-parity tests for the flat simulation engine.
+
+``tests/data/sim_golden.json`` holds metrics recorded from the original
+(seed) pure-Python object-based engine for all 5 schedulers × 2 small
+workloads × 2 topologies (+ one unbound-baseline variant exercising
+migration and centralized runtime data). The flat engine — in both its
+pure-Python and compiled-C forms — must reproduce every metric exactly:
+the rewrite preserves behavior draw-for-draw, not just statistically.
+"""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import placement, topology
+from repro.core.sim import bots, simulate
+from repro.core.sim import _csim
+from repro.core.sim.table import compile_tree
+
+GOLD = json.load(open(os.path.join(os.path.dirname(__file__), "data",
+                                   "sim_golden.json")))
+TOPOS = {"sunfire": topology.sunfire_x4600(),
+         "tpu2x4": topology.tpu_pod_2d(2, 4)}
+SCHEDS = ("bf", "cilk", "wf", "dfwspt", "dfwsrpt")
+METRICS = ("makespan", "speedup", "steals", "failed_probes",
+           "remote_work_fraction", "queue_wait", "tasks")
+
+HAVE_C = _csim.load() is not None
+ENGINES = ["py", "c"] if HAVE_C else ["py"]
+
+
+def _small_workloads():
+    return {"fft_small": bots.fft(n=1 << 10, cutoff=8),
+            "sparselu_small": bots.sparselu(n=8)}
+
+
+@pytest.fixture(params=ENGINES)
+def engine(request, monkeypatch):
+    monkeypatch.setenv("REPRO_SIM_ENGINE", request.param)
+    return request.param
+
+
+def _assert_matches(r, key):
+    gold = GOLD[key]
+    for m in METRICS:
+        assert getattr(r, m) == gold[m], (key, m, getattr(r, m), gold[m])
+
+
+@pytest.mark.parametrize("topo_name", sorted(TOPOS))
+@pytest.mark.parametrize("sched", SCHEDS)
+def test_golden_parity(engine, topo_name, sched):
+    """Flat engines reproduce the seed engine bit-for-bit on fixtures."""
+    topo = TOPOS[topo_name]
+    for wl_name, wl in _small_workloads().items():
+        r = simulate(topo, list(range(8)), wl, sched, seed=7)
+        _assert_matches(r, f"{topo_name}/{wl_name}/{sched}")
+
+
+def test_golden_parity_baseline_numa(engine):
+    """The unbound-baseline variant: migration draws + centralized
+    runtime data + spilled root arrays, all bit-exact."""
+    topo = TOPOS["sunfire"]
+    wl = _small_workloads()["fft_small"]
+    r = simulate(topo, list(range(16)), wl, "wf", seed=3,
+                 root_data_nodes=placement.first_touch_spill(topo, 0, 2),
+                 runtime_data_node=0, migration_rate=0.15)
+    _assert_matches(r, "sunfire/fft_small/wf+baseline-numa")
+
+
+def test_determinism(engine):
+    """Same seed → bit-identical SimResult across repeated runs."""
+    topo = TOPOS["sunfire"]
+    wl = bots.fft(n=1 << 10, cutoff=8)
+    runs = [simulate(topo, list(range(8)), wl, "dfwsrpt", seed=11,
+                     migration_rate=0.1, runtime_data_node=0)
+            for _ in range(3)]
+    assert runs[0] == runs[1] == runs[2]
+
+
+@pytest.mark.skipif(not HAVE_C, reason="C kernel unavailable")
+@pytest.mark.parametrize("sched", SCHEDS)
+def test_cross_engine_exact(sched, monkeypatch):
+    """C and Python engines agree exactly on configs beyond the fixtures
+    (different seeds/threads, uma topology, migration, runtime node)."""
+    cases = [
+        (TOPOS["sunfire"], list(range(0, 16, 2)), dict(seed=5)),
+        (TOPOS["tpu2x4"], list(range(4)), dict(seed=1, migration_rate=0.3,
+                                               runtime_data_node=2)),
+        (topology.uma(6), list(range(6)), dict(seed=9)),
+        # single-core machine + migration: numpy's randint(1) consumes
+        # no rng draws — a replica divergence caught by verification.
+        (topology.uma(1), [0], dict(seed=0, migration_rate=0.5)),
+    ]
+    for topo, cores, kw in cases:
+        wl = bots.floorplan(depth=4)
+        monkeypatch.setenv("REPRO_SIM_ENGINE", "py")
+        r_py = simulate(topo, cores, wl, sched, **kw)
+        monkeypatch.setenv("REPRO_SIM_ENGINE", "c")
+        r_c = simulate(topo, cores, wl, sched, **kw)
+        assert r_py == r_c, (sched, topo.name, kw)
+
+
+# ----------------------------------------------------------------------
+# flat builders
+# ----------------------------------------------------------------------
+
+TABLE_FIELDS = ("work_pre", "work_post", "f_root", "f_parent",
+                "first_child", "num_children", "first_post", "num_post",
+                "parent", "cls", "cls_f_root", "cls_f_parent")
+
+
+@pytest.mark.parametrize("flat,tree", [
+    (lambda: bots.fft_flat(n=1 << 10, cutoff=8),
+     lambda: bots.fft(n=1 << 10, cutoff=8)),
+    (lambda: bots.sort_flat(n=1 << 10, cutoff=16),
+     lambda: bots.sort(n=1 << 10, cutoff=16)),
+    (lambda: bots.strassen_flat(depth=3),
+     lambda: bots.strassen(depth=3)),
+])
+def test_flat_builder_matches_compiled_tree(flat, tree):
+    """The iterative CSR builders are exact twins of tree compilation."""
+    tf = flat().table
+    tt = compile_tree(tree().root)
+    for field in TABLE_FIELDS:
+        assert np.array_equal(getattr(tf, field), getattr(tt, field)), field
+
+
+def test_flat_builder_simulates_identically():
+    """A flat-built workload and its tree twin give identical results."""
+    topo = TOPOS["sunfire"]
+    wf = bots.fft_flat(n=1 << 10, cutoff=8)
+    wt = bots.fft(n=1 << 10, cutoff=8)
+    r1 = simulate(topo, list(range(8)), wf, "dfwsrpt", seed=7)
+    r2 = simulate(topo, list(range(8)), wt, "dfwsrpt", seed=7)
+    assert r1 == r2
+
+
+@pytest.mark.slow
+def test_paper_scale_builds_fast_enough():
+    """Paper tier: ≥1M tasks, builds + simulates well under a minute."""
+    import time
+    from repro.core import priority
+    t0 = time.time()
+    wl = bots.make("fft", "paper")
+    assert wl.table.n >= bots.PAPER_MIN_TASKS
+    topo = TOPOS["sunfire"]
+    alloc = priority.allocate_threads(topo, 16)
+    r = simulate(topo, alloc, wl, "dfwsrpt", seed=0)
+    assert time.time() - t0 < 60.0
+    assert r.makespan > 0 and r.steals > 0
+    for name in ("sort", "strassen"):
+        assert bots.make(name, "paper").table.n >= bots.PAPER_MIN_TASKS
+
+
+# ----------------------------------------------------------------------
+# C kernel replica selftests
+# ----------------------------------------------------------------------
+
+@pytest.mark.skipif(not HAVE_C, reason="C kernel unavailable")
+def test_c_mt19937_matches_numpy():
+    lib = _csim.load()
+    for seed in (0, 7, 12345):
+        out = np.zeros(3000, dtype=np.uint32)
+        lib.mt_selftest(seed, 3000, out)
+        want = np.random.RandomState(seed).randint(
+            0, 2 ** 32, size=3000, dtype=np.uint32)
+        assert np.array_equal(out, want)
+
+
+@pytest.mark.skipif(not HAVE_C, reason="C kernel unavailable")
+def test_c_shuffle_matches_numpy():
+    lib = _csim.load()
+    for n in (2, 5, 15):
+        reps = 300
+        rows = np.zeros((reps, n), dtype=np.int64)
+        lib.shuffle_selftest(3, n, reps, rows.ravel())
+        rng = np.random.RandomState(3)
+        for r in range(reps):
+            g = list(range(n))
+            rng.shuffle(g)
+            assert list(rows[r]) == g
+
+
+@pytest.mark.skipif(not HAVE_C, reason="C kernel unavailable")
+def test_c_set_replica_matches_cpython():
+    """The wake-one park set in C replicates CPython's set add/pop."""
+    import random
+    lib = _csim.load()
+    rnd = random.Random(123)
+    for _ in range(150):
+        T = rnd.choice([2, 3, 8, 16, 64, 300])
+        ops, ref, s = [], [], set()
+        for _ in range(rnd.randrange(5, 300)):
+            if s and rnd.random() < 0.45:
+                ops.append(-1)
+                ref.append(s.pop())
+            else:
+                v = rnd.randrange(T)
+                ops.append(v)
+                s.add(v)
+        arr = np.array(ops, dtype=np.int64)
+        out = np.zeros(max(len(ops), 1), dtype=np.int64)
+        npop = lib.set_selftest(len(ops), arr, out)
+        assert npop == len(ref) and list(out[:npop]) == ref
+
+
+# ----------------------------------------------------------------------
+# topology satellites
+# ----------------------------------------------------------------------
+
+def test_core_distance_matrix_cached():
+    topo = topology.sunfire_x4600()
+    m1 = topo.core_distance_matrix()
+    m2 = topo.core_distance_matrix()
+    assert m1 is m2  # cached, not rebuilt per simulate() call
+    assert not m1.flags.writeable
+    expect = topo.node_distance[topo.core_node][:, topo.core_node]
+    assert np.array_equal(m1, expect)
+
+
+def test_hop_histogram_vectorized_semantics():
+    for topo in (topology.sunfire_x4600(), topology.tpu_pod_2d(3, 3),
+                 topology.uma(4)):
+        d = topo.core_distance_matrix()
+        for core in range(topo.num_cores):
+            hist = {}
+            for other in range(topo.num_cores):
+                if other != core:
+                    k = int(d[core, other])
+                    hist[k] = hist.get(k, 0) + 1
+            assert topo.hop_histogram(core) == hist

@@ -20,6 +20,7 @@ from repro.models import model
 from repro.optim import AdamWConfig, adamw_init, adamw_update
 
 
+@pytest.mark.slow
 def test_training_reduces_loss_end_to_end():
     """A tiny LM must overfit the deterministic synthetic stream."""
     loss = train_mod.main([
@@ -30,6 +31,7 @@ def test_training_reduces_loss_end_to_end():
     assert loss < 5.0
 
 
+@pytest.mark.slow
 def test_checkpoint_restart_bitwise_resume():
     """Stop at step k, restart, and land on the same loss trajectory."""
     cfg = configs.get("qwen2.5-3b").reduced()
@@ -78,6 +80,7 @@ def test_serving_driver_runs():
     assert (gen >= 0).all() and (gen < 256).all()
 
 
+@pytest.mark.slow
 def test_moe_arch_trains_with_steal_table():
     loss = train_mod.main([
         "--arch", "granite-moe-1b-a400m", "--reduced", "--steps", "30",
