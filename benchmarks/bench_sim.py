@@ -8,15 +8,26 @@ Methodology: per configuration we report
     one-time tree→CSR compile and the serial-reference walk);
   * ``warm_s``  — best of ``--reps`` steady-state calls (compiled table
     and serial reference cached), the regime the paper-reproduction
-    driver (`bots_repro`, ~230 simulate calls over 6 reused workloads)
-    actually runs in;
+    driver (`bots_repro`, batched figure sweeps over 6 reused
+    workloads) actually runs in;
   * ``tasks_per_s`` — warm throughput.
+
+A separate ``sweep`` section times the batched :class:`SweepPlan` path
+on the fft-medium (5 stock schedulers × 6 thread counts) grid against
+the sum of the equivalent warm per-call ``simulate()`` loop — the
+batch amortizes per-config setup and, on the C engine, runs the whole
+grid in one kernel call.
 
 Engines: ``c`` is the compiled flat-array kernel, ``py`` the pure-Python
 flat reference engine (also run when the C kernel is unavailable). Both
 are bit-exact replicas of the seed engine (see tests/test_sim_golden).
 
     PYTHONPATH=src python -m benchmarks.bench_sim [--quick] [--out PATH]
+
+``--check`` re-measures and compares ``warm_s`` per (workload, scale,
+scheduler, engine) row against the committed ``BENCH_sim.json``,
+exiting non-zero on any >25% regression — the ROADMAP "sim perf
+trajectory" gate.
 """
 
 from __future__ import annotations
@@ -25,11 +36,17 @@ import argparse
 import json
 import os
 import platform
+import sys
 import time
 
 from repro.core import priority, topology
-from repro.core.sim import SCHEDULERS, bots, ensure_table, simulate
+from repro.core.sim import (SCHEDULERS, SweepPlan, bots, ensure_table,
+                            reset_engine_cache, simulate)
 from repro.core.sim import _csim
+
+# the five stock schedulers benched against the committed baseline;
+# policy-layer additions (dfwshier, ...) get their own rows automatically
+STOCK = ("bf", "cilk", "wf", "dfwspt", "dfwsrpt")
 
 
 def _workloads(quick: bool):
@@ -40,24 +57,46 @@ def _workloads(quick: bool):
         yield ("fft", "paper", lambda: bots.make("fft", "paper"))
         yield ("sort", "paper", lambda: bots.make("sort", "paper"))
         yield ("strassen", "paper", lambda: bots.make("strassen", "paper"))
+        yield ("nqueens", "paper", lambda: bots.make("nqueens", "paper"))
+
+
+class _engine_env:
+    """Force one engine for a ``with`` block (cache-safe)."""
+
+    def __init__(self, engine: str):
+        self.engine = engine
+
+    def __enter__(self):
+        self.saved = os.environ.get("REPRO_SIM_ENGINE")
+        os.environ["REPRO_SIM_ENGINE"] = self.engine
+
+    def __exit__(self, *exc):
+        if self.saved is None:
+            os.environ.pop("REPRO_SIM_ENGINE", None)
+        else:
+            os.environ["REPRO_SIM_ENGINE"] = self.saved
+        reset_engine_cache()
+
+
+def _engines():
+    return ["py"] if _csim.load() is None else ["c", "py"]
 
 
 def bench(quick: bool = False, reps: int = 5, threads: int = 16):
     topo = topology.sunfire_x4600()
     alloc = priority.allocate_threads(topo, threads)
-    engines = ["py"] if _csim.load() is None else ["c", "py"]
-    saved_engine = os.environ.get("REPRO_SIM_ENGINE")
-    try:
-        for name, scale, build in _workloads(quick):
-            # the py engine sits out the ≥1M-task tier (minutes per call;
-            # the C kernel owns it) — skip before paying the build cost
-            scale_engines = [e for e in engines
-                             if not (e == "py" and scale == "paper")]
-            if not scale_engines:
-                continue
-            schedulers = SCHEDULERS if scale != "paper" else ("wf", "dfwsrpt")
-            for engine in scale_engines:
-                os.environ["REPRO_SIM_ENGINE"] = engine
+    engines = _engines()
+    for name, scale, build in _workloads(quick):
+        # the py engine sits out the ≥1M-task tier (minutes per call;
+        # the C kernel owns it) — skip before paying the build cost
+        scale_engines = [e for e in engines
+                         if not (e == "py" and scale == "paper")]
+        if not scale_engines:
+            continue
+        schedulers = tuple(SCHEDULERS) if scale != "paper" \
+            else ("wf", "dfwsrpt")
+        for engine in scale_engines:
+            with _engine_env(engine):
                 for sched in schedulers:
                     # cold: fresh workload object, nothing cached — the
                     # cold_s rows track the one-time tree/table build +
@@ -84,11 +123,88 @@ def bench(quick: bool = False, reps: int = 5, threads: int = 16):
                         tasks_per_s=round(tasks / warm_s, 1),
                         makespan=r.makespan, speedup=round(r.speedup, 4),
                         steals=r.steals)
-    finally:
-        if saved_engine is None:
-            os.environ.pop("REPRO_SIM_ENGINE", None)
-        else:
-            os.environ["REPRO_SIM_ENGINE"] = saved_engine
+
+
+def bench_sweep(reps: int = 3):
+    """Batched-sweep amortization: fft-medium, 5 schedulers × 6 thread
+    counts, sweep wall-clock vs the sum of warm per-call simulate()."""
+    topo = topology.sunfire_x4600()
+    wl = bots.fft(n=1 << 15, cutoff=4)
+    thread_counts = (2, 4, 6, 8, 12, 16)
+    grid = [(sched, T) for sched in STOCK for T in thread_counts]
+    out = []
+    for engine in _engines():
+        with _engine_env(engine):
+            # warm every shared cache (tables, plans, serial refs) so
+            # both timings measure the steady-state dispatch regime
+            for sched, T in grid:
+                simulate(topo, priority.allocate_threads(topo, T), wl,
+                         sched, seed=0)
+            loop_s = float("inf")
+            sweep_s = float("inf")
+            for _ in range(reps):
+                t0 = time.perf_counter()
+                loop_res = [simulate(topo,
+                                     priority.allocate_threads(topo, T),
+                                     wl, sched, seed=0)
+                            for sched, T in grid]
+                loop_s = min(loop_s, time.perf_counter() - t0)
+                t0 = time.perf_counter()
+                plan = SweepPlan()
+                for sched, T in grid:
+                    plan.add(topo, priority.allocate_threads(topo, T),
+                             wl, sched, seed=0)
+                sweep_res = plan.run()
+                sweep_s = min(sweep_s, time.perf_counter() - t0)
+            assert sweep_res == loop_res, "sweep diverged from per-call loop"
+            out.append(dict(
+                grid="fft-medium x 5 sched x 6 T", configs=len(grid),
+                engine=engine, loop_s=round(loop_s, 6),
+                sweep_s=round(sweep_s, 6),
+                amortization=round(loop_s / sweep_s, 3)))
+    return out
+
+
+def check(rows, baseline_path: str, threshold: float = 0.25,
+          abs_slack: float = 0.001) -> int:
+    """Compare fresh warm_s against the committed baseline; returns the
+    number of regressions (and prints each).
+
+    A row regresses when it is both >threshold relatively *and*
+    >abs_slack seconds absolutely slower — sub-millisecond rows on a
+    shared container jitter past any pure ratio test.
+    """
+    with open(baseline_path) as f:
+        base = json.load(f)
+    base_by_key = {(r["workload"], r["scale"], r["scheduler"], r["engine"]):
+                   r for r in base.get("results", [])}
+    regressions = 0
+    # losing a whole engine (e.g. the C toolchain breaking, so only py
+    # rows get measured) must fail the gate, not silently shrink it
+    fresh_engines = {row["engine"] for row in rows}
+    lost = {r["engine"] for r in base.get("results", [])} - fresh_engines
+    for engine in sorted(lost):
+        regressions += 1
+        print(f"REGRESSION engine {engine!r}: present in {baseline_path} "
+              f"but produced no rows in this run", file=sys.stderr)
+    for row in rows:
+        key = (row["workload"], row["scale"], row["scheduler"],
+               row["engine"])
+        ref = base_by_key.get(key)
+        if ref is None:
+            continue  # new row (new scheduler/tier) — nothing to gate on
+        ratio = row["warm_s"] / ref["warm_s"]
+        if ratio > 1.0 + threshold and row["warm_s"] - ref["warm_s"] > abs_slack:
+            regressions += 1
+            print(f"REGRESSION {'/'.join(key)}: warm_s "
+                  f"{ref['warm_s']:.6f}s -> {row['warm_s']:.6f}s "
+                  f"({(ratio - 1) * 100:+.1f}%)", file=sys.stderr)
+    checked = sum(1 for row in rows
+                  if (row["workload"], row["scale"], row["scheduler"],
+                      row["engine"]) in base_by_key)
+    print(f"# --check: {checked} rows vs {baseline_path}, "
+          f"{regressions} regression(s) over {threshold:.0%}")
+    return regressions
 
 
 def main() -> None:
@@ -96,7 +212,16 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--reps", type=int, default=5)
     ap.add_argument("--threads", type=int, default=16)
-    ap.add_argument("--out", default="BENCH_sim.json")
+    ap.add_argument("--out", default=None,
+                    help="output path (default BENCH_sim.json; a --quick "
+                         "run defaults to BENCH_sim_quick.json so the "
+                         "committed full baseline isn't overwritten)")
+    ap.add_argument("--check", action="store_true",
+                    help="compare fresh warm_s against the committed "
+                         "baseline; exit non-zero on >25%% regression "
+                         "(does not rewrite the baseline)")
+    ap.add_argument("--baseline", default="BENCH_sim.json",
+                    help="baseline file for --check")
     args = ap.parse_args()
 
     rows = []
@@ -110,6 +235,17 @@ def main() -> None:
               f"{row['tasks_per_s']:.0f},{row['speedup']},{row['steals']}",
               flush=True)
 
+    if args.check:
+        sys.exit(1 if check(rows, args.baseline) else 0)
+
+    # the sweep section is a full 30-config grid per engine — skip it in
+    # quick smoke runs
+    sweep_rows = [] if args.quick else bench_sweep()
+    for s in sweep_rows:
+        print(f"# sweep[{s['engine']}] {s['grid']}: loop={s['loop_s']:.4f}s "
+              f"sweep={s['sweep_s']:.4f}s "
+              f"amortization={s['amortization']:.2f}x")
+
     doc = dict(
         meta=dict(
             host=platform.node(), python=platform.python_version(),
@@ -117,11 +253,16 @@ def main() -> None:
             c_kernel_error=_csim.load_error,
             timestamp=time.strftime("%Y-%m-%dT%H:%M:%S"),
             note="warm_s is best-of-reps steady state; cold_s includes "
-                 "the one-time tree->CSR compile + serial reference."),
-        results=rows)
-    with open(args.out, "w") as f:
+                 "the one-time tree->CSR compile + serial reference. "
+                 "sweep rows time the batched SweepPlan path against "
+                 "the per-call loop on the same grid."),
+        results=rows,
+        sweep=sweep_rows)
+    out = args.out or ("BENCH_sim_quick.json" if args.quick
+                       else "BENCH_sim.json")
+    with open(out, "w") as f:
         json.dump(doc, f, indent=1, sort_keys=True)
-    print(f"# wrote {args.out} ({len(rows)} rows)")
+    print(f"# wrote {out} ({len(rows)} rows)")
 
 
 if __name__ == "__main__":

@@ -11,14 +11,18 @@ first-touched on node 0, root arrays spilled from node 0. NUMA model:
 priority-bound threads, local runtime data, arrays spilled from the
 master's (priority-chosen) node. One common serial reference per
 benchmark, as the paper uses one serial time per benchmark.
+
+Each figure suite assembles its whole grid into one
+:class:`~repro.core.sim.SweepPlan` and runs it in a single batched
+engine call (bit-identical to the per-``simulate()`` loop); the
+compiled task tables, victim plans, spill distance vectors, and serial
+references are shared across every config of the grid.
 """
 
 from __future__ import annotations
 
-import numpy as np
-
 from repro.core import placement, priority, topology
-from repro.core.sim import SimParams, bots, serial_time, simulate
+from repro.core.sim import SimParams, SweepPlan, bots, serial_time
 
 TOPO = topology.sunfire_x4600()
 PR = priority.priorities(TOPO)
@@ -33,7 +37,7 @@ SPILL = {"fft": 2, "sort": 3, "strassen": 2, "nqueens": 1,
 
 # Workloads are cached across figure suites: the tree→CSR compile and
 # the serial-time reference are per-Workload one-time costs, and every
-# one of the ~230 simulate() calls below reuses them.
+# config of the batched sweeps below reuses them.
 _WL_CACHE: dict[str, object] = {}
 
 
@@ -50,29 +54,40 @@ def _workload(name):
     return wl
 
 
-def run_benchmark(name: str, schedulers=("bf", "cilk", "wf"),
-                  threads=THREADS, seed: int = 0):
-    """Returns {(sched, variant, T): speedup} for one BOTS benchmark."""
+def plan_benchmark(name: str, schedulers=("bf", "cilk", "wf"),
+                   threads=THREADS, seed: int = 0):
+    """Build the (scheduler × variant × T) grid for one BOTS benchmark.
+
+    Returns ``(plan, keys)`` — run ``plan`` (alone or merged into a
+    bigger sweep) and zip the results against ``keys``.
+    """
     wl = _workload(name)
     spill0 = placement.first_touch_spill(TOPO, 0, SPILL[name])
     serial = serial_time(TOPO, wl, 0, spill0, PARAMS)
-    out = {}
+    plan = SweepPlan()
+    keys = []
     for T in threads:
         base_cores = list(range(T))
         alloc = priority.allocate_threads(TOPO, T)
         mn = int(TOPO.core_node[alloc[0]])
         spill_n = placement.first_touch_spill(TOPO, mn, SPILL[name], PR)
         for sched in schedulers:
-            r = simulate(TOPO, base_cores, wl, sched, params=PARAMS,
-                         seed=seed, root_data_nodes=spill0,
-                         runtime_data_node=0, migration_rate=MIGRATION,
-                         serial_reference=serial)
-            out[(sched, "base", T)] = r.speedup
-            r = simulate(TOPO, alloc, wl, sched, params=PARAMS, seed=seed,
-                         root_data_nodes=spill_n,
-                         serial_reference=serial)
-            out[(sched, "numa", T)] = r.speedup
-    return out
+            plan.add(TOPO, base_cores, wl, sched, params=PARAMS,
+                     seed=seed, root_data_nodes=spill0,
+                     runtime_data_node=0, migration_rate=MIGRATION,
+                     serial_reference=serial)
+            keys.append((sched, "base", T))
+            plan.add(TOPO, alloc, wl, sched, params=PARAMS, seed=seed,
+                     root_data_nodes=spill_n, serial_reference=serial)
+            keys.append((sched, "numa", T))
+    return plan, keys
+
+
+def run_benchmark(name: str, schedulers=("bf", "cilk", "wf"),
+                  threads=THREADS, seed: int = 0):
+    """Returns {(sched, variant, T): speedup} for one BOTS benchmark."""
+    plan, keys = plan_benchmark(name, schedulers, threads, seed)
+    return {k: r.speedup for k, r in zip(keys, plan.run())}
 
 
 def fig_5_to_10(report, quick=False):
@@ -92,8 +107,15 @@ def fig_5_to_10(report, quick=False):
 
 
 def fig_13_to_15(report, quick=False):
-    """NUMA-aware task schedulers on FFT / Sort / Strassen (Figs 13–15)."""
+    """NUMA-aware task schedulers on FFT / Sort / Strassen (Figs 13–15).
+
+    ``dfwshier`` (the policy layer's hierarchical steal variant) rides
+    along as an extra column next to the paper's three schedulers.
+    """
     threads = (16,) if quick else (2, 4, 8, 16)
+    scheds = ("wf", "dfwspt", "dfwsrpt", "dfwshier")
+    plan = SweepPlan()
+    keys = []
     for name in ("fft", "sort", "strassen"):
         wl = _workload(name)
         spill0 = placement.first_touch_spill(TOPO, 0, SPILL[name])
@@ -102,17 +124,21 @@ def fig_13_to_15(report, quick=False):
             alloc = priority.allocate_threads(TOPO, T)
             mn = int(TOPO.core_node[alloc[0]])
             spill = placement.first_touch_spill(TOPO, mn, SPILL[name], PR)
-            sp = {}
-            for sched in ("wf", "dfwspt", "dfwsrpt"):
-                r = simulate(TOPO, alloc, wl, sched, params=PARAMS,
-                             seed=0, root_data_nodes=spill,
-                             serial_reference=serial)
-                sp[sched] = r.speedup
-            if T == threads[-1]:
-                g1 = (sp["dfwspt"] / sp["wf"] - 1) * 100
-                g2 = (sp["dfwsrpt"] / sp["wf"] - 1) * 100
-                report(f"bots-sched/{name}@{T}",
-                       derived=f"wf={sp['wf']:.2f}x "
-                               f"dfwspt={sp['dfwspt']:.2f}x({g1:+.1f}%) "
-                               f"dfwsrpt={sp['dfwsrpt']:.2f}x({g2:+.1f}%)")
+            for sched in scheds:
+                plan.add(TOPO, alloc, wl, sched, params=PARAMS,
+                         seed=0, root_data_nodes=spill,
+                         serial_reference=serial)
+                keys.append((name, T, sched))
+    speedups = {k: r.speedup for k, r in zip(keys, plan.run())}
+    for name in ("fft", "sort", "strassen"):
+        T = threads[-1]
+        sp = {sched: speedups[(name, T, sched)] for sched in scheds}
+        g1 = (sp["dfwspt"] / sp["wf"] - 1) * 100
+        g2 = (sp["dfwsrpt"] / sp["wf"] - 1) * 100
+        g3 = (sp["dfwshier"] / sp["wf"] - 1) * 100
+        report(f"bots-sched/{name}@{T}",
+               derived=f"wf={sp['wf']:.2f}x "
+                       f"dfwspt={sp['dfwspt']:.2f}x({g1:+.1f}%) "
+                       f"dfwsrpt={sp['dfwsrpt']:.2f}x({g2:+.1f}%) "
+                       f"dfwshier={sp['dfwshier']:.2f}x({g3:+.1f}%)")
     return True

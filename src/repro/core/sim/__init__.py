@@ -1,3 +1,6 @@
 from .runtime import (TaskSpec, Workload, SimParams, SimResult, simulate,
-                      serial_time, SCHEDULERS, TaskTable, ensure_table)
-from . import bots
+                      serial_time, SCHEDULERS, SchedulerSpec, TaskTable,
+                      ensure_table, reset_engine_cache)
+from .policy import register, get_spec, compile_victim_plan
+from .sweep import SweepConfig, SweepPlan, run_sweep
+from . import bots, policy, sweep

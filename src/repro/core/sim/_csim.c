@@ -343,14 +343,18 @@ static inline int64_t ring_pop_front(ring_t *r)
 /* Simulator                                                          */
 /* ------------------------------------------------------------------ */
 
-enum { SCHED_BF = 0, SCHED_CILK = 1, SCHED_WF = 2,
-       SCHED_DFWSPT = 3, SCHED_DFWSRPT = 4 };
-
-/* dpar: [hop_lambda, hop_lambda_steal, lock_time, deque_lock_time,
+/* Victim plan (compiled by policy.py): per thread a run of *groups*
+ * (group_off), each group a run of *units* (unit_off), each unit a
+ * contiguous run of victim ids (victim_off into victims). A sweep
+ * emits groups in order; a group with >1 unit first shuffles the unit
+ * order (one Fisher-Yates of unit-count elements — the only rng the
+ * sweep consumes, matching the seed engine's per-group shuffles).
+ *
+ * dpar: [hop_lambda, hop_lambda_steal, lock_time, deque_lock_time,
  *        steal_time, spawn_time, wake_latency, qop_time, cache_refill,
  *        mem_intensity, migration_rate]
- * ipar: [T, num_cores, num_nodes, n_tasks, scheduler, seed,
- *        runtime_data_node(-1=none), root_node0]
+ * ipar: [T, num_cores, num_nodes, n_tasks, queue_shared, child_first,
+ *        seed, runtime_data_node(-1=none), root_node0]
  * dout: [makespan, remote, total_exec, queue_wait]
  * iout: [steals, failed_probes]
  * returns 0 on success, negative on allocation failure.
@@ -364,10 +368,10 @@ int sim_run(const double *dpar, const int64_t *ipar,
             const int64_t *core_node, const int64_t *node_dist,
             const double *root_dist,
             int64_t *cores,
-            const int64_t *pri_orders,   /* T*(T-1), dfwspt only */
-            const int64_t *grp_counts,   /* T, dfwsrpt only */
-            const int64_t *grp_sizes,    /* sum(grp_counts) */
-            const int64_t *grp_victims,  /* T*(T-1) */
+            const int64_t *vp_group_off,   /* T+1 */
+            const int64_t *vp_unit_off,    /* n_groups+1 */
+            const int64_t *vp_victim_off,  /* n_units+1 */
+            const int64_t *vp_victims,     /* total victim slots */
             double *dout, int64_t *iout)
 {
     const double hop_lambda = dpar[0], hop_lambda_steal = dpar[1];
@@ -378,42 +382,26 @@ int sim_run(const double *dpar, const int64_t *ipar,
     const double migration_rate = dpar[10];
     const int64_t T = ipar[0], num_cores = ipar[1], NN = ipar[2];
     const int64_t n_tasks = ipar[3];
-    const int sched = (int)ipar[4];
-    const uint32_t seed = (uint32_t)ipar[5];
-    const int64_t rdn = ipar[6];
-    const int64_t rnode0 = ipar[7];
-    const int depth_first = sched != SCHED_BF;
-    const int wf_like = (sched == SCHED_WF || sched == SCHED_DFWSPT ||
-                         sched == SCHED_DFWSRPT);
+    const int depth_first = !ipar[4];
+    const int wf_like = (int)ipar[5];
+    const uint32_t seed = (uint32_t)ipar[6];
+    const int64_t rdn = ipar[7];
+    const int64_t rnode0 = ipar[8];
     const double mu_lam = mem_intensity * hop_lambda;
 
     int rc = -1;
     rk_state rng;
     rk_seed(&rng, seed);
 
-    /* per-thread group offsets for dfwsrpt */
-    int64_t *grp_off = NULL, *vic_off = NULL;
-    if (sched == SCHED_DFWSRPT) {
-        grp_off = (int64_t *)malloc((size_t)(T + 1) * sizeof(int64_t));
-        vic_off = (int64_t *)malloc((size_t)(T + 1) * sizeof(int64_t));
-        if (!grp_off || !vic_off) goto fail0;
-        grp_off[0] = 0; vic_off[0] = 0;
-        for (int64_t th = 0; th < T; th++) {
-            grp_off[th + 1] = grp_off[th] + grp_counts[th];
-            int64_t nv = 0;
-            for (int64_t g = grp_off[th]; g < grp_off[th + 1]; g++)
-                nv += grp_sizes[g];
-            vic_off[th + 1] = vic_off[th] + nv;
-        }
-    }
-
     int64_t *pending = (int64_t *)calloc((size_t)n_tasks, sizeof(int64_t));
     int64_t *exec_node = (int64_t *)calloc((size_t)n_tasks, sizeof(int64_t));
     uint8_t *phase = (uint8_t *)calloc((size_t)n_tasks, 1);
     int64_t *order = (int64_t *)malloc((size_t)(T > 1 ? T : 1) * sizeof(int64_t));
+    int64_t *uidx = (int64_t *)malloc((size_t)(T > 1 ? T : 1) * sizeof(int64_t));
     double *dl_free = (double *)calloc((size_t)T, sizeof(double));
     ring_t *local = (ring_t *)calloc((size_t)T, sizeof(ring_t));
-    if (!pending || !exec_node || !phase || !order || !dl_free || !local)
+    if (!pending || !exec_node || !phase || !order || !uidx || !dl_free ||
+        !local)
         goto fail1;
     for (int64_t i = 0; i < T; i++)
         if (ring_init(&local[i], 256)) goto fail1;
@@ -454,29 +442,26 @@ int sim_run(const double *dpar, const int64_t *ipar,
                         t += qop_time * (1.0 + hop_lambda_steal *
                              (double)node_dist[core_node[cores[th]] * NN + rdn]);
                 } else {
+                    /* materialize one sweep from the compiled plan */
                     int64_t n_order = 0;
-                    if (sched == SCHED_DFWSPT) {
-                        const int64_t *po = pri_orders + th * (T - 1);
-                        for (int64_t k = 0; k < T - 1; k++)
-                            order[k] = po[k];
-                        n_order = T - 1;
-                    } else if (sched == SCHED_DFWSRPT) {
-                        const int64_t *vics = grp_victims + vic_off[th];
-                        int64_t pos = 0;
-                        for (int64_t g = grp_off[th]; g < grp_off[th + 1]; g++) {
-                            int64_t gs = grp_sizes[g];
-                            for (int64_t k = 0; k < gs; k++)
-                                order[pos + k] = vics[pos + k];
-                            rk_shuffle(&rng, order + pos, gs);
-                            pos += gs;
+                    for (int64_t g = vp_group_off[th];
+                         g < vp_group_off[th + 1]; g++) {
+                        const int64_t u0 = vp_unit_off[g];
+                        const int64_t u1 = vp_unit_off[g + 1];
+                        const int64_t nu = u1 - u0;
+                        if (nu > 1) {
+                            for (int64_t k = 0; k < nu; k++)
+                                uidx[k] = u0 + k;
+                            rk_shuffle(&rng, uidx, nu);
+                            for (int64_t k = 0; k < nu; k++)
+                                for (int64_t j = vp_victim_off[uidx[k]];
+                                     j < vp_victim_off[uidx[k] + 1]; j++)
+                                    order[n_order++] = vp_victims[j];
+                        } else {
+                            for (int64_t j = vp_victim_off[u0];
+                                 j < vp_victim_off[u1]; j++)
+                                order[n_order++] = vp_victims[j];
                         }
-                        n_order = pos;
-                    } else { /* cilk, wf: fresh random order of all others */
-                        for (int64_t v = 0, k = 0; v < T; v++)
-                            if (v != th)
-                                order[k++] = v;
-                        n_order = T - 1;
-                        rk_shuffle(&rng, order, n_order);
                     }
                     task = -1;
                     const int64_t tn = core_node[cores[th]];
@@ -685,11 +670,47 @@ fail1:
     if (local)
         for (int64_t i = 0; i < T; i++)
             free(local[i].buf);
-    free(local); free(dl_free); free(order);
+    free(local); free(dl_free); free(uidx); free(order);
     free(phase); free(exec_node); free(pending);
-fail0:
-    free(vic_off); free(grp_off);
     return rc;
+}
+
+/* Batched sweep entry: run n_cfg prepared configs back to back without
+ * re-crossing the Python boundary per run. Every per-config argument
+ * arrives as an array of pointers (one per config, same order as the
+ * sim_run parameters); outputs land in flat dout (4 per config) and
+ * iout (2 per config) blocks. Stops at the first failing config and
+ * returns its negative 1-based index; 0 on success.
+ */
+int sim_run_batch(int64_t n_cfg,
+                  void **dpar, void **ipar,
+                  void **wp, void **wpo, void **fr, void **fp,
+                  void **fc, void **nc, void **fpw, void **npw,
+                  void **par,
+                  void **core_node, void **node_dist, void **root_dist,
+                  void **cores,
+                  void **vp_group_off, void **vp_unit_off,
+                  void **vp_victim_off, void **vp_victims,
+                  double *dout, int64_t *iout)
+{
+    for (int64_t i = 0; i < n_cfg; i++) {
+        int rc = sim_run(
+            (const double *)dpar[i], (const int64_t *)ipar[i],
+            (const double *)wp[i], (const double *)wpo[i],
+            (const double *)fr[i], (const double *)fp[i],
+            (const int64_t *)fc[i], (const int64_t *)nc[i],
+            (const int64_t *)fpw[i], (const int64_t *)npw[i],
+            (const int64_t *)par[i],
+            (const int64_t *)core_node[i], (const int64_t *)node_dist[i],
+            (const double *)root_dist[i],
+            (int64_t *)cores[i],
+            (const int64_t *)vp_group_off[i], (const int64_t *)vp_unit_off[i],
+            (const int64_t *)vp_victim_off[i], (const int64_t *)vp_victims[i],
+            dout + 4 * i, iout + 2 * i);
+        if (rc != 0)
+            return (int)-(i + 1);
+    }
+    return 0;
 }
 
 /* ------------------------------------------------------------------ */

@@ -28,6 +28,14 @@ _lib = None
 _load_attempted = False
 load_error: str | None = None
 
+
+def reset() -> None:
+    """Forget a previous load attempt (e.g. the toolchain changed)."""
+    global _lib, _load_attempted, load_error
+    _lib = None
+    _load_attempted = False
+    load_error = None
+
 _f64p = np.ctypeslib.ndpointer(np.float64, flags="C_CONTIGUOUS")
 _i64p = np.ctypeslib.ndpointer(np.int64, flags="C_CONTIGUOUS")
 _u32p = np.ctypeslib.ndpointer(np.uint32, flags="C_CONTIGUOUS")
@@ -62,6 +70,9 @@ def _build() -> str:
     return out
 
 
+_uptr = np.ctypeslib.ndpointer(np.uintp, flags="C_CONTIGUOUS")
+
+
 def load():
     """Returns the loaded library or None (with load_error set)."""
     global _lib, _load_attempted, load_error
@@ -77,9 +88,13 @@ def load():
             _i64p, _i64p, _i64p, _i64p, _i64p,  # fc, nc, fpw, npw, par
             _i64p, _i64p, _f64p,              # core_node, node_dist, root_dist
             _i64p,                            # cores (in/out)
-            ct.c_void_p, ct.c_void_p, ct.c_void_p, ct.c_void_p,  # orders
+            _i64p, _i64p, _i64p, _i64p,       # victim plan (goff/uoff/voff/v)
             _f64p, _i64p,                     # dout, iout
         ]
+        lib.sim_run_batch.restype = ct.c_int
+        # n_cfg, then 19 arrays of per-config pointers, then flat outputs
+        lib.sim_run_batch.argtypes = (
+            [ct.c_int64] + [_uptr] * 19 + [_f64p, _i64p])
         lib.mt_selftest.restype = None
         lib.mt_selftest.argtypes = [ct.c_uint32, ct.c_int64, _u32p]
         lib.shuffle_selftest.restype = None
@@ -94,19 +109,13 @@ def load():
     return _lib
 
 
-def _ptr(arr):
-    return None if arr is None else arr.ctypes.data_as(ct.c_void_p)
+def _marshal(ctx):
+    """Lower one prepared context into the sim_run argument tuple.
 
-
-SCHED_IDS = {"bf": 0, "cilk": 1, "wf": 2, "dfwspt": 3, "dfwsrpt": 4}
-
-
-def run(ctx) -> dict:
-    """Run the C kernel on a prepared simulation context (see runtime)."""
-    lib = load()
-    assert lib is not None
+    Returns the 19 arrays in kernel parameter order plus the mutable
+    ``cores`` array (migration writes back thread→core bindings).
+    """
     tbl = ctx["table"]
-    T = ctx["T"]
     dpar = np.array([
         ctx["hop_lambda"], ctx["hop_lambda_steal"], ctx["lock_time"],
         ctx["deque_lock_time"], ctx["steal_time"], ctx["spawn_time"],
@@ -115,42 +124,68 @@ def run(ctx) -> dict:
     ], dtype=np.float64)
     rdn = ctx["runtime_data_node"]
     ipar = np.array([
-        T, ctx["num_cores"], ctx["num_nodes"], tbl.n,
-        SCHED_IDS[ctx["scheduler"]], ctx["seed"],
+        ctx["T"], ctx["num_cores"], ctx["num_nodes"], tbl.n,
+        int(ctx["queue_shared"]), int(ctx["child_first"]), ctx["seed"],
         -1 if rdn is None else int(rdn), ctx["root_node0"],
     ], dtype=np.int64)
     cores = np.ascontiguousarray(ctx["cores"], dtype=np.int64)
-    dout = np.zeros(4, dtype=np.float64)
-    iout = np.zeros(2, dtype=np.int64)
+    goff, uoff, voff, victims = ctx["vplan"].flat()
+    args = (dpar, ipar,
+            tbl.work_pre, tbl.work_post, tbl.f_root, tbl.f_parent,
+            tbl.first_child, tbl.num_children, tbl.first_post, tbl.num_post,
+            tbl.parent,
+            ctx["core_node_arr"], ctx["node_dist_flat"], ctx["root_dist"],
+            cores,
+            goff, uoff, voff, victims)
+    return args, cores
 
-    sched = ctx["scheduler"]
-    pri = grp_counts = grp_sizes = grp_victims = None
-    if sched == "dfwspt":
-        pri = np.ascontiguousarray(
-            [v for row in ctx["pri_orders"] for v in row], dtype=np.int64)
-    elif sched == "dfwsrpt":
-        counts, sizes, victims = [], [], []
-        for groups in ctx["dist_groups"]:
-            counts.append(len(groups))
-            for g in groups:
-                sizes.append(len(g))
-                victims.extend(g)
-        grp_counts = np.ascontiguousarray(counts, dtype=np.int64)
-        grp_sizes = np.ascontiguousarray(sizes, dtype=np.int64)
-        grp_victims = np.ascontiguousarray(victims, dtype=np.int64)
 
-    rc = lib.sim_run(
-        dpar, ipar,
-        tbl.work_pre, tbl.work_post, tbl.f_root, tbl.f_parent,
-        tbl.first_child, tbl.num_children, tbl.first_post, tbl.num_post,
-        tbl.parent,
-        ctx["core_node_arr"], ctx["node_dist_flat"], ctx["root_dist"],
-        cores,
-        _ptr(pri), _ptr(grp_counts), _ptr(grp_sizes), _ptr(grp_victims),
-        dout, iout)
-    if rc != 0:
-        raise MemoryError(f"C sim kernel failed with code {rc}")
-    ctx["cores"][:] = [int(c) for c in cores]  # migration mutates bindings
+def _unpack(dout, iout):
     return dict(makespan=float(dout[0]), remote=float(dout[1]),
                 total_exec=float(dout[2]), queue_wait=float(dout[3]),
                 steals=int(iout[0]), failed=int(iout[1]))
+
+
+def run(ctx) -> dict:
+    """Run the C kernel on a prepared simulation context (see runtime)."""
+    lib = load()
+    assert lib is not None
+    args, cores = _marshal(ctx)
+    dout = np.zeros(4, dtype=np.float64)
+    iout = np.zeros(2, dtype=np.int64)
+    rc = lib.sim_run(*args, dout, iout)
+    if rc != 0:
+        raise MemoryError(f"C sim kernel failed with code {rc}")
+    ctx["cores"][:] = [int(c) for c in cores]  # migration mutates bindings
+    return _unpack(dout, iout)
+
+
+def run_batch(ctxs) -> list[dict]:
+    """Run many prepared contexts in one kernel call.
+
+    The whole grid executes inside ``sim_run_batch`` — no Python ↔ C
+    crossing per config. Per-config argument arrays are packed as
+    pointer tables; everything stays referenced until the call returns.
+    """
+    lib = load()
+    assert lib is not None
+    if not ctxs:
+        return []
+    n = len(ctxs)
+    marshalled = [_marshal(ctx) for ctx in ctxs]
+    # 19 pointer tables, one per kernel parameter position
+    ptr_tables = [
+        np.ascontiguousarray(
+            [m[0][k].ctypes.data for m in marshalled], dtype=np.uintp)
+        for k in range(19)
+    ]
+    dout = np.zeros(4 * n, dtype=np.float64)
+    iout = np.zeros(2 * n, dtype=np.int64)
+    rc = lib.sim_run_batch(n, *ptr_tables, dout, iout)
+    if rc != 0:
+        raise MemoryError(f"C sim kernel failed on batch config "
+                          f"{-rc - 1} of {n}")
+    for ctx, (_, cores) in zip(ctxs, marshalled):
+        ctx["cores"][:] = [int(c) for c in cores]
+    return [_unpack(dout[4 * i:4 * i + 4], iout[2 * i:2 * i + 2])
+            for i in range(n)]

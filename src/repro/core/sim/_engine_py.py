@@ -14,6 +14,11 @@ arrays, and per-call recomputation with precomputed lookup tables:
   * ``collections.deque`` task pools (the seed engine's ``pop(0)``
     steal was O(queue length)).
 
+Scheduler identity never reaches this loop: the context carries the
+spec's ``queue_shared`` / ``child_first`` flags and a compiled
+:class:`~.policy.VictimPlan`, whose pre-lowered group list is
+interpreted per steal sweep (a fully static plan skips even that).
+
 The C kernel (:mod:`._csim`) is a transcription of this loop; the
 golden-parity suite pins both to fixtures recorded from the seed
 engine.
@@ -35,7 +40,6 @@ def run(ctx) -> dict:
     n_tasks = tbl.n
     T = ctx["T"]
     cores = ctx["cores"]          # mutated in place under migration
-    sched = ctx["scheduler"]
     rng = ctx["rng"]
     core_node_l = ctx["core_node_arr"].tolist()
     NN = ctx["num_nodes"]
@@ -55,11 +59,12 @@ def run(ctx) -> dict:
     qop_time = ctx["qop_time"]
     cache_refill = ctx["cache_refill"]
     mu_lam = ctx["mem_intensity"] * ctx["hop_lambda"]
-    depth_first = sched != "bf"
-    wf_like = sched in ("wf", "dfwspt", "dfwsrpt")
-    pri_orders = ctx.get("pri_orders")
-    dist_groups = ctx.get("dist_groups")
-    all_others = ctx.get("all_others")
+    depth_first = not ctx["queue_shared"]
+    wf_like = ctx["child_first"]
+    vplan = ctx["vplan"]
+    plan_groups = vplan.py_groups
+    static_orders = vplan.static_order
+    shuffle = rng.shuffle
 
     # --- precomputed cost tables (exact seed expressions) ---
     cls_fr = tbl.cls_f_root.tolist()
@@ -133,17 +138,23 @@ def run(ctx) -> dict:
                     task = lp.pop()
                     t += qop_c[cores[th]]
                 else:
-                    if sched == "dfwspt":
-                        order = pri_orders[th]
-                    elif sched == "dfwsrpt":
+                    order = static_orders[th]
+                    if order is None:
+                        # interpret the compiled sweep: one shuffle per
+                        # group with >1 unit, draws matching the seed.
                         order = []
-                        for group in dist_groups[th]:
-                            g = list(group)
-                            rng.shuffle(g)
-                            order.extend(g)
-                    else:  # cilk, wf: fresh random victim order
-                        order = list(all_others[th])
-                        rng.shuffle(order)
+                        for tag, payload in plan_groups[th]:
+                            if tag == 0:          # static run
+                                order.extend(payload)
+                            elif tag == 1:        # singleton units
+                                g = list(payload)
+                                shuffle(g)
+                                order.extend(g)
+                            else:                 # multi-victim units
+                                units = list(payload)
+                                shuffle(units)
+                                for u in units:
+                                    order.extend(u)
                     ct = cores[th]
                     if rdn is None:
                         prow = probe_rows[ct]

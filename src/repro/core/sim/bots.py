@@ -20,7 +20,7 @@ from .runtime import TaskSpec, Workload
 from .table import table_from_arrays
 
 __all__ = ["fft", "sort", "strassen", "nqueens", "floorplan", "sparselu",
-           "fft_flat", "sort_flat", "strassen_flat",
+           "fft_flat", "sort_flat", "strassen_flat", "nqueens_flat",
            "WORKLOADS", "make", "PAPER_MIN_TASKS"]
 
 # the paper-scale tier targets BOTS-like task counts (FFT medium spawns
@@ -256,6 +256,62 @@ def strassen_flat(depth: int = 6, base_work: float = 512.0) -> Workload:
     return _uniform_flat(levels, leaf, mem_intensity=0.85, name="strassen")
 
 
+# ----------------------------------------------------------------------
+# Irregular paper tier: level-synchronous builder with per-node random
+# fan-out. Unlike the uniform builders above there is no per-level tile
+# to repeat — instead each BFS level's child counts are drawn as one
+# vectorized randint and the CSR arrays grow level by level, so a
+# multi-million-task irregular tree still never materializes a TaskSpec.
+# ----------------------------------------------------------------------
+
+
+def nqueens_flat(n: int = 16, cutoff_depth: int = 6,
+                 seed: int = 0) -> Workload:
+    """Paper-scale twin of :func:`nqueens` (irregular fan-out, no tree).
+
+    Same tasking structure and memory profile as the recursive builder —
+    internal nodes spawn ``max(1, branch - randint(0, branch//2))``
+    children with ``branch = n - depth``, leaves explore the remaining
+    subtree serially — but the fan-outs of a whole level are drawn in
+    one vectorized call and appended straight to the CSR arrays
+    (level-synchronous BFS id order, which is exactly the layout
+    ``table_from_arrays`` expects). Defaults give ~1.7M tasks, the
+    BOTS-medium regime. Deterministic per seed; the rng *stream* differs
+    from the recursive builder's depth-first draw order, so this is its
+    own tier, not a bit-twin.
+    """
+    if cutoff_depth < 1:
+        raise ValueError("cutoff_depth must be >= 1")
+    rng = np.random.RandomState(seed)
+    seg_wp, seg_nc = [], []
+    m = 1  # nodes at the current level (root)
+    for depth in range(cutoff_depth):
+        branch = n - depth
+        if branch < 1:
+            raise ValueError(f"cutoff_depth {cutoff_depth} too deep for "
+                             f"n={n} (branch hits zero)")
+        draws = rng.randint(0, max(branch // 2, 1), size=m)
+        k = np.maximum(1, branch - draws).astype(np.int64)
+        seg_wp.append(np.full(m, 2.0))
+        seg_nc.append(k)
+        m = int(k.sum())
+    # leaves explore their remaining placements serially
+    leaf_w = rng.randint(40, 120, size=m).astype(np.float64) \
+        * float(n - cutoff_depth)
+    seg_wp.append(leaf_w)
+    seg_nc.append(np.zeros(m, np.int64))
+    wp = np.concatenate(seg_wp)
+    nc = np.concatenate(seg_nc)
+    total = wp.shape[0]
+    n_internal = total - m
+    wpo = np.zeros(total)
+    wpo[:n_internal] = 0.5
+    tbl = table_from_arrays(
+        wp, wpo, np.full(total, 0.05), np.full(total, 0.1),
+        nc, np.zeros(total, np.int64))
+    return Workload("nqueens", None, mem_intensity=0.15, table=tbl)
+
+
 WORKLOADS = {
     "fft": fft, "sort": sort, "strassen": strassen,
     "nqueens": nqueens, "floorplan": floorplan, "sparselu": sparselu,
@@ -263,6 +319,7 @@ WORKLOADS = {
 
 PAPER_BUILDERS = {
     "fft": fft_flat, "sort": sort_flat, "strassen": strassen_flat,
+    "nqueens": nqueens_flat,
 }
 
 

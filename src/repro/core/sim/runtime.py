@@ -37,12 +37,27 @@ Engine architecture (this module is the public API):
   cached on the :class:`Workload`. Paper-scale workloads (millions of
   tasks) are built directly as tables without ever materializing a
   Python tree (see ``bots.make(name, "paper")``).
+* schedulers are **declarative policies**, not engine branches: a
+  :class:`~.policy.SchedulerSpec` names a queue discipline
+  (shared-locked vs. per-thread LIFO), a spawn order (child-first vs.
+  parent-first) and a victim policy, and ``policy.compile_victim_plan``
+  lowers the victim policy once per (topology, binding) into group/unit
+  arrays that both engines consume identically. ``SCHEDULERS`` is the
+  registry mapping name → spec; register a new scheduler with
+  ``policy.register(SchedulerSpec(...))`` and every engine, benchmark
+  driver, and sweep picks it up — no engine edits (see ``policy.py``).
 * the event loop runs either in a compiled C kernel (``_csim``;
   built on demand, ~100x the seed engine) or a pure-Python flat loop
   (``_engine_py``). Both preserve the seed engine's behavior exactly —
   same rng draw sequence, same event ordering, same float association —
   and are pinned by golden-parity fixtures recorded from the seed.
-  Select with ``REPRO_SIM_ENGINE={auto,c,py}`` (default auto).
+  Select with ``REPRO_SIM_ENGINE={auto,c,py}`` (default auto; the
+  choice is validated once and cached until the variable changes —
+  ``reset_engine_cache()`` drops it, and ``SimResult.engine`` reports
+  the engine that actually ran).
+* many-config grids (the paper's figure sweeps) should go through
+  :mod:`.sweep`: a ``SweepPlan`` shares every compiled artifact across
+  configs and the C path runs the whole batch in one call.
 """
 
 from __future__ import annotations
@@ -54,16 +69,15 @@ from typing import Optional, Sequence
 import numpy as np
 
 from ..topology import Topology
-from ..stealing import victim_order
-from . import _csim, _engine_py
+from . import _csim, _engine_py, policy
+from .policy import SCHEDULERS, SchedulerSpec
 from .table import TaskTable, compile_tree
 
 __all__ = [
     "TaskSpec", "Workload", "SimParams", "SimResult", "simulate",
-    "serial_time", "SCHEDULERS", "TaskTable", "ensure_table",
+    "serial_time", "SCHEDULERS", "SchedulerSpec", "TaskTable",
+    "ensure_table", "reset_engine_cache",
 ]
-
-SCHEDULERS = ("bf", "cilk", "wf", "dfwspt", "dfwsrpt")
 
 
 @dataclasses.dataclass
@@ -150,6 +164,9 @@ class SimResult:
     failed_probes: int
     remote_work_fraction: float  # share of exec time that was NUMA penalty
     queue_wait: float            # total time spent waiting on the bf lock
+    # which engine actually ran ('c' or 'py'); excluded from equality so
+    # cross-engine parity checks compare metrics only.
+    engine: str = dataclasses.field(default="", compare=False)
 
 
 def _root_data_setup(topo: Topology, core: int, root_data_nodes):
@@ -158,15 +175,27 @@ def _root_data_setup(topo: Topology, core: int, root_data_nodes):
     None → the node of ``core`` (Linux first-touch by the master thread);
     int → a single explicit node. Large inputs spill over several nodes
     and pages are interleaved over the spill set, so the access distance
-    is the mean over it (paper §V.B).
+    is the mean over it (paper §V.B). The mean-distance vector is cached
+    on the topology per spill set — sweeps hit the same handful of
+    placements across hundreds of configs.
     """
     if root_data_nodes is None:
         root_data_nodes = [int(topo.core_node[core])]
     elif isinstance(root_data_nodes, (int, np.integer)):
         root_data_nodes = [int(root_data_nodes)]
     else:
-        root_data_nodes = list(root_data_nodes)
-    root_dist = topo.node_distance[:, root_data_nodes].mean(axis=1)
+        root_data_nodes = [int(n) for n in root_data_nodes]
+    cache = topo.__dict__.get("_root_dist_cache")
+    if cache is None:
+        cache = {}
+        object.__setattr__(topo, "_root_dist_cache", cache)
+    key = tuple(root_data_nodes)
+    root_dist = cache.get(key)
+    if root_dist is None:
+        root_dist = np.ascontiguousarray(
+            topo.node_distance[:, root_data_nodes].mean(axis=1),
+            dtype=np.float64)
+        cache[key] = root_dist
     return root_data_nodes, root_dist
 
 
@@ -212,26 +241,114 @@ def serial_time(topo: Topology, workload: Workload, core: int,
     return total
 
 
+# (env value, resolved engine); revalidated only when the variable
+# changes, so the per-simulate hot path is one os.environ read.
+_engine_cache: "tuple[str, str] | None" = None
+
+
+def reset_engine_cache() -> None:
+    """Drop the cached engine choice (tests / after toolchain changes).
+
+    Also forgets a failed C-kernel load attempt, so a compiler that
+    appeared after the first call gets a fresh chance.
+    """
+    global _engine_cache
+    _engine_cache = None
+    _csim.reset()
+
+
 def _select_engine() -> str:
+    global _engine_cache
     mode = os.environ.get("REPRO_SIM_ENGINE", "auto")
+    cached = _engine_cache
+    if cached is not None and cached[0] == mode:
+        return cached[1]
     if mode == "py":
-        return "py"
-    if mode == "c":
+        engine = "py"
+    elif mode == "c":
         if _csim.load() is None:
             raise RuntimeError(
                 f"REPRO_SIM_ENGINE=c but the kernel is unavailable: "
                 f"{_csim.load_error}")
-        return "c"
-    if mode != "auto":
+        engine = "c"
+    elif mode == "auto":
+        engine = "c" if _csim.load() is not None else "py"
+    else:
         raise ValueError(
             f"REPRO_SIM_ENGINE={mode!r}: expected 'auto', 'c', or 'py'")
-    return "c" if _csim.load() is not None else "py"
+    _engine_cache = (mode, engine)
+    return engine
+
+
+def _prepare_ctx(topo: Topology,
+                 thread_cores: Sequence[int],
+                 workload: Workload,
+                 spec: SchedulerSpec,
+                 p: SimParams,
+                 seed: int,
+                 root_data_nodes,
+                 runtime_data_node,
+                 migration_rate: float) -> dict:
+    """Assemble one engine-ready simulation context.
+
+    Every compiled artifact is cached where sweeps can share it: the
+    task table on the workload, the victim plan and root-distance
+    vectors on the topology, the serial reference on the table.
+    """
+    T = len(thread_cores)
+    cores = [int(c) for c in thread_cores]
+    tbl = ensure_table(workload)
+    root_data_nodes, root_dist = _root_data_setup(topo, cores[0],
+                                                  root_data_nodes)
+    ctx: dict = dict(
+        table=tbl, T=T, cores=cores, seed=seed,
+        queue_shared=spec.queue == "shared",
+        child_first=spec.spawn == "child_first",
+        vplan=policy.compile_victim_plan(spec, topo, cores),
+        num_cores=topo.num_cores, num_nodes=topo.num_nodes,
+        core_node_arr=np.ascontiguousarray(topo.core_node, dtype=np.int64),
+        node_dist_flat=np.ascontiguousarray(topo.node_distance,
+                                            dtype=np.int64).ravel(),
+        root_dist=root_dist,
+        root_data_nodes=root_data_nodes,
+        root_node0=int(root_data_nodes[0]),
+        runtime_data_node=runtime_data_node,
+        migration_rate=migration_rate,
+        mem_intensity=workload.mem_intensity,
+        hop_lambda=p.hop_lambda, hop_lambda_steal=p.hop_lambda_steal,
+        lock_time=p.lock_time, deque_lock_time=p.deque_lock_time,
+        steal_time=p.steal_time, spawn_time=p.spawn_time,
+        wake_latency=p.wake_latency, qop_time=p.qop_time,
+        cache_refill=p.cache_refill,
+    )
+    # Fresh per-config stream, seeded exactly as the seed engine did.
+    # Victim-plan compilation consumes no draws, so the engine always
+    # starts from RandomState(seed)'s initial state.
+    ctx["rng"] = np.random.RandomState(seed)
+    return ctx
+
+
+def _finish_result(ctx: dict, out: dict, serial: float,
+                   engine: str) -> SimResult:
+    makespan = out["makespan"]
+    rf = out["remote"] / max(out["total_exec"], 1e-12)
+    return SimResult(
+        makespan=makespan,
+        serial_time=serial,
+        speedup=serial / makespan if makespan > 0 else float("nan"),
+        tasks=ctx["table"].n,
+        steals=out["steals"],
+        failed_probes=out["failed"],
+        remote_work_fraction=rf,
+        queue_wait=out["queue_wait"],
+        engine=engine,
+    )
 
 
 def simulate(topo: Topology,
              thread_cores: Sequence[int],
              workload: Workload,
-             scheduler: str,
+             scheduler: "str | SchedulerSpec",
              params: SimParams | None = None,
              seed: int = 0,
              root_data_nodes: int | Sequence[int] | None = None,
@@ -243,7 +360,8 @@ def simulate(topo: Topology,
     Args:
       thread_cores: core id per thread; thread 0 is the master (its node
         receives the root arrays under first-touch unless overridden).
-      scheduler: one of ``SCHEDULERS``.
+      scheduler: a registered scheduler name (see ``SCHEDULERS``) or a
+        :class:`SchedulerSpec` directly.
       root_data_nodes: node(s) holding the benchmark's big arrays. Large
         inputs spill over several nodes (Linux first-touch falls back to
         nearby nodes when one fills — paper §V.B); pages are interleaved
@@ -261,59 +379,12 @@ def simulate(topo: Topology,
         :func:`serial_time` on the master core with the same data nodes.
         Pass one common value when comparing variants like the paper does.
     """
-    if scheduler not in SCHEDULERS:
-        raise ValueError(f"unknown scheduler {scheduler!r}")
+    spec = policy.get_spec(scheduler)
     p = params or SimParams()
-    T = len(thread_cores)
-    cores = [int(c) for c in thread_cores]
-    tbl = ensure_table(workload)
-    dist = topo.core_distance_matrix()
-    root_data_nodes, root_dist = _root_data_setup(topo, cores[0],
-                                                  root_data_nodes)
-
-    ctx: dict = dict(
-        table=tbl, T=T, cores=cores, scheduler=scheduler, seed=seed,
-        num_cores=topo.num_cores, num_nodes=topo.num_nodes,
-        core_node_arr=np.ascontiguousarray(topo.core_node, dtype=np.int64),
-        node_dist_flat=np.ascontiguousarray(topo.node_distance,
-                                            dtype=np.int64).ravel(),
-        root_dist=np.ascontiguousarray(root_dist, dtype=np.float64),
-        root_node0=int(root_data_nodes[0]),
-        runtime_data_node=runtime_data_node,
-        migration_rate=migration_rate,
-        mem_intensity=workload.mem_intensity,
-        hop_lambda=p.hop_lambda, hop_lambda_steal=p.hop_lambda_steal,
-        lock_time=p.lock_time, deque_lock_time=p.deque_lock_time,
-        steal_time=p.steal_time, spawn_time=p.spawn_time,
-        wake_latency=p.wake_latency, qop_time=p.qop_time,
-        cache_refill=p.cache_refill,
-    )
-
-    # Victim orders. DFWSPT's list is static; DFWSRPT re-randomizes ties
-    # (equal-distance victims) per sweep; stock cilk/wf sweep victims in
-    # a fresh random order. Distance groups are precomputed once, in the
-    # exact construction order of the seed engine (dict-insertion by
-    # ascending victim id within each distance).
-    rng = np.random.RandomState(seed)
-    ctx["rng"] = rng
-    if scheduler == "dfwspt":
-        ctx["pri_orders"] = [victim_order(topo, cores, t, "dfwspt", rng)
-                             for t in range(T)]
-    elif scheduler == "dfwsrpt":
-        dist_groups = []
-        for th in range(T):
-            by_d: dict[int, list[int]] = {}
-            for v in range(T):
-                if v != th:
-                    by_d.setdefault(int(dist[cores[th], cores[v]]),
-                                    []).append(v)
-            dist_groups.append([by_d[d] for d in sorted(by_d)])
-        ctx["dist_groups"] = dist_groups
-    elif scheduler in ("cilk", "wf"):
-        ctx["all_others"] = [[v for v in range(T) if v != th]
-                             for th in range(T)]
-
-    if _select_engine() == "c":
+    ctx = _prepare_ctx(topo, thread_cores, workload, spec, p, seed,
+                       root_data_nodes, runtime_data_node, migration_rate)
+    engine = _select_engine()
+    if engine == "c":
         out = _csim.run(ctx)
     else:
         out = _engine_py.run(ctx)
@@ -322,16 +393,6 @@ def simulate(topo: Topology,
     if serial_reference is not None:
         serial = serial_reference
     else:
-        serial = serial_time(topo, workload, cores[0], root_data_nodes, p)
-    makespan = out["makespan"]
-    rf = out["remote"] / max(out["total_exec"], 1e-12)
-    return SimResult(
-        makespan=makespan,
-        serial_time=serial,
-        speedup=serial / makespan if makespan > 0 else float("nan"),
-        tasks=tbl.n,
-        steals=out["steals"],
-        failed_probes=out["failed"],
-        remote_work_fraction=rf,
-        queue_wait=out["queue_wait"],
-    )
+        serial = serial_time(topo, workload, thread_cores[0],
+                             ctx["root_data_nodes"], p)
+    return _finish_result(ctx, out, serial, engine)

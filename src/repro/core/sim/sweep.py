@@ -1,0 +1,103 @@
+"""Batched simulation sweeps.
+
+The paper-reproduction drivers run *grids*: every figure is a cartesian
+sweep over (topology, thread binding, workload, scheduler, data
+placement, seed). Calling :func:`~.runtime.simulate` per cell re-enters
+the Python↔engine boundary a few hundred times; a :class:`SweepPlan`
+instead prepares every config up front — sharing the compiled task
+tables (cached on the workload), victim plans and root-distance vectors
+(cached on the topology), and serial-time references (cached on the
+table) — and hands the whole batch to the engine in one call. On the C
+path that is a single ``sim_run_batch`` invocation: the kernel iterates
+configs back to back without re-crossing into Python per run.
+
+Results are bit-identical to the per-call loop: each config gets its own
+``RandomState(seed)`` stream and the engines are untouched — batching
+changes *when* work is dispatched, never *what* runs.
+
+Example::
+
+    plan = SweepPlan()
+    for T in (2, 4, 8, 16):
+        for sched in ("wf", "dfwspt", "dfwsrpt"):
+            plan.add(topo, priority.allocate_threads(topo, T), wl, sched,
+                     root_data_nodes=spill, serial_reference=serial)
+    results = plan.run()        # list[SimResult], one per add() order
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+from . import _csim, _engine_py, policy
+from .runtime import (SimParams, SimResult, Workload, _finish_result,
+                      _prepare_ctx, _select_engine, serial_time)
+
+__all__ = ["SweepConfig", "SweepPlan", "run_sweep"]
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class SweepConfig:
+    """One cell of a sweep grid — the ``simulate()`` argument tuple."""
+    topo: object
+    thread_cores: tuple
+    workload: Workload
+    scheduler: object            # registered name or SchedulerSpec
+    params: Optional[SimParams] = None
+    seed: int = 0
+    root_data_nodes: object = None
+    runtime_data_node: Optional[int] = None
+    migration_rate: float = 0.0
+    serial_reference: Optional[float] = None
+
+
+class SweepPlan:
+    """An ordered batch of :class:`SweepConfig`; results match add() order."""
+
+    def __init__(self, configs: Sequence[SweepConfig] = ()):
+        self.configs: list[SweepConfig] = list(configs)
+
+    def add(self, topo, thread_cores, workload, scheduler,
+            **kwargs) -> SweepConfig:
+        cfg = SweepConfig(topo, tuple(int(c) for c in thread_cores),
+                          workload, scheduler, **kwargs)
+        self.configs.append(cfg)
+        return cfg
+
+    def __len__(self) -> int:
+        return len(self.configs)
+
+    def __iter__(self):
+        return iter(self.configs)
+
+    def run(self) -> list[SimResult]:
+        return run_sweep(self)
+
+
+def run_sweep(plan: "SweepPlan | Sequence[SweepConfig]") -> list[SimResult]:
+    """Run every config in ``plan``; returns results in config order."""
+    configs = list(plan.configs if isinstance(plan, SweepPlan) else plan)
+    if not configs:
+        return []
+    engine = _select_engine()
+    ctxs, serials = [], []
+    for cfg in configs:
+        spec = policy.get_spec(cfg.scheduler)
+        p = cfg.params or SimParams()
+        ctx = _prepare_ctx(cfg.topo, cfg.thread_cores, cfg.workload, spec,
+                           p, cfg.seed, cfg.root_data_nodes,
+                           cfg.runtime_data_node, cfg.migration_rate)
+        ctxs.append(ctx)
+        if cfg.serial_reference is not None:
+            serials.append(cfg.serial_reference)
+        else:
+            serials.append(serial_time(cfg.topo, cfg.workload,
+                                       cfg.thread_cores[0],
+                                       ctx["root_data_nodes"], p))
+    if engine == "c":
+        outs = _csim.run_batch(ctxs)
+    else:
+        outs = [_engine_py.run(ctx) for ctx in ctxs]
+    return [_finish_result(ctx, out, serial, engine)
+            for ctx, out, serial in zip(ctxs, outs, serials)]

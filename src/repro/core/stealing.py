@@ -9,9 +9,13 @@ distance:
   * DFWSRPT — ties broken by a fresh random permutation each time the
     thread goes stealing ("victim thread is picked randomly" among the
     equally-close), which avoids convoys on the lowest-id victim.
+  * DFWSHIER — the policy layer's hierarchical variant: equal-distance
+    ties are randomized at *node* granularity — a sweep probes all of
+    one NUMA node's threads (id asc) before moving to the next node,
+    so consecutive probes share victim-node memory.
 
 ``priority_list`` builds the static DFWSPT list; ``victim_order`` yields
-the per-attempt order for either policy. The same orders drive the MoE
+the per-attempt order for any policy. The same orders drive the MoE
 overflow re-routing in :mod:`repro.core.routing` (the TPU adaptation),
 where "threads" are expert-owning devices.
 """
@@ -45,7 +49,8 @@ def victim_order(topo: Topology, thread_cores: Sequence[int], thread: int,
                  policy: str, rng: np.random.RandomState) -> list[int]:
     """Victim id order for one stealing sweep.
 
-    policy: 'dfwspt' (deterministic ties) or 'dfwsrpt' (random ties).
+    policy: 'dfwspt' (deterministic ties), 'dfwsrpt' (random ties), or
+    'dfwshier' (node-granular random ties, node members contiguous).
     """
     me = thread_cores[thread]
     dist = topo.core_distance_matrix()
@@ -55,6 +60,19 @@ def victim_order(topo: Topology, thread_cores: Sequence[int], thread: int,
     if policy == "dfwsrpt":
         jitter = rng.permutation(len(thread_cores))
         return sorted(others, key=lambda t: (dist[me, thread_cores[t]], jitter[t]))
+    if policy == "dfwshier":
+        # One sweep of the policy layer's node_hier grouping (the same
+        # code the engines compile), so an ahead-of-time order from a
+        # fresh RandomState(seed) equals the engine's first sweep.
+        from .sim.policy import _victim_groups
+        order: list[int] = []
+        for units in _victim_groups("node_hier", topo, thread_cores)[thread]:
+            if len(units) > 1:
+                units = list(units)
+                rng.shuffle(units)
+            for u in units:
+                order.extend(u)
+        return order
     raise ValueError(f"unknown stealing policy {policy!r}")
 
 

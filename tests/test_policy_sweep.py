@@ -1,0 +1,298 @@
+"""Tests for the scheduler-policy layer and the batched sweep runner.
+
+The tentpole contract: scheduler identity is a declarative
+:class:`SchedulerSpec` compiled once into victim-plan arrays consumed
+identically by the C and Python engines; ``SCHEDULERS`` is a registry;
+a :class:`SweepPlan` batch is bit-identical to the per-call
+``simulate()`` loop on the same grid.
+"""
+
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import placement, priority, topology
+from repro.core.sim import (SCHEDULERS, SchedulerSpec, SimParams, SweepPlan,
+                            bots, policy, reset_engine_cache, simulate)
+from repro.core.sim import _csim
+from repro.core.sim.sweep import run_sweep
+
+TOPO = topology.sunfire_x4600()
+HAVE_C = _csim.load() is not None
+ENGINES = ["py", "c"] if HAVE_C else ["py"]
+
+
+@pytest.fixture(params=ENGINES)
+def engine(request, monkeypatch):
+    monkeypatch.setenv("REPRO_SIM_ENGINE", request.param)
+    return request.param
+
+
+# ----------------------------------------------------------------------
+# SchedulerSpec + registry
+# ----------------------------------------------------------------------
+
+def test_stock_registry_contents():
+    assert set(SCHEDULERS) >= {"bf", "cilk", "wf", "dfwspt", "dfwsrpt",
+                               "dfwshier"}
+    assert SCHEDULERS["bf"].queue == "shared"
+    assert SCHEDULERS["wf"].spawn == "child_first"
+    assert SCHEDULERS["cilk"].spawn == "parent_first"
+    assert SCHEDULERS["dfwspt"].victim == "dist_id"
+    assert SCHEDULERS["dfwsrpt"].victim == "dist_random"
+    assert SCHEDULERS["dfwshier"].victim == "node_hier"
+
+
+def test_spec_validation():
+    with pytest.raises(ValueError):
+        SchedulerSpec("x", queue="bogus")
+    with pytest.raises(ValueError):
+        SchedulerSpec("x", spawn="bogus")
+    with pytest.raises(ValueError):
+        SchedulerSpec("x", victim="bogus")
+    with pytest.raises(ValueError):  # shared queue has no victim sweep
+        SchedulerSpec("x", queue="shared", spawn="parent_first",
+                      victim="random")
+    with pytest.raises(ValueError):  # child_first needs local pools
+        SchedulerSpec("x", queue="shared", spawn="child_first",
+                      victim="none")
+
+
+def test_unknown_scheduler_rejected():
+    wl = bots.fft(n=1 << 8, cutoff=8)
+    with pytest.raises(ValueError, match="unknown scheduler"):
+        simulate(TOPO, [0, 1], wl, "nope")
+
+
+def test_register_duplicate_guard():
+    with pytest.raises(ValueError, match="already registered"):
+        policy.register(SchedulerSpec("wf"))
+
+
+def test_register_new_policy_runs_without_engine_edits(engine, monkeypatch):
+    """A brand-new field combination — parent-first spawning with
+    hierarchical stealing — runs through both engines unchanged."""
+    name = f"cilk_hier_{engine}"
+    # setitem instead of policy.register() so the global registry is
+    # restored after the test (register() is itself covered above)
+    monkeypatch.setitem(policy.SCHEDULERS, name,
+                        SchedulerSpec(name, queue="local",
+                                      spawn="parent_first",
+                                      victim="node_hier"))
+    wl = bots.fft(n=1 << 10, cutoff=8)
+    r1 = simulate(TOPO, list(range(8)), wl, name, seed=7)
+    r2 = simulate(TOPO, list(range(8)), wl, name, seed=7)
+    assert r1 == r2 and r1.steals > 0
+    # a spec object is accepted directly, no registration needed
+    r3 = simulate(TOPO, list(range(8)), wl, SCHEDULERS[name], seed=7)
+    assert r3 == r1
+
+
+@pytest.mark.skipif(not HAVE_C, reason="C kernel unavailable")
+def test_new_policy_cross_engine_exact(monkeypatch):
+    spec = SchedulerSpec("anon_hier", queue="local", spawn="parent_first",
+                         victim="node_hier")
+    wl = bots.sparselu(n=8)
+    monkeypatch.setenv("REPRO_SIM_ENGINE", "py")
+    r_py = simulate(TOPO, list(range(10)), wl, spec, seed=5)
+    monkeypatch.setenv("REPRO_SIM_ENGINE", "c")
+    r_c = simulate(TOPO, list(range(10)), wl, spec, seed=5)
+    assert r_py == r_c
+
+
+def test_victim_plan_cached_per_binding():
+    spec = SCHEDULERS["dfwsrpt"]
+    p1 = policy.compile_victim_plan(spec, TOPO, range(8))
+    p2 = policy.compile_victim_plan(spec, TOPO, list(range(8)))
+    assert p1 is p2
+    p3 = policy.compile_victim_plan(spec, TOPO, range(6))
+    assert p3 is not p1
+
+
+def test_victim_plan_matches_stealing_module():
+    """The compiled dist_id plan is the stealing module's static list."""
+    from repro.core.stealing import priority_list
+    cores = list(range(12))
+    plan = policy.compile_victim_plan(SCHEDULERS["dfwspt"], TOPO, cores)
+    for th in range(12):
+        assert plan.static_order[th] == priority_list(TOPO, cores, th)
+
+
+def test_victim_plan_flat_arrays_consistent():
+    cores = list(range(8))
+    for name in ("cilk", "dfwspt", "dfwsrpt", "dfwshier"):
+        plan = policy.compile_victim_plan(SCHEDULERS[name], TOPO, cores)
+        goff, uoff, voff, victims = plan.flat()
+        assert goff.shape == (9,)
+        assert uoff.shape == (goff[-1] + 1,)
+        assert voff.shape == (uoff[-1] + 1,)
+        assert victims.shape == (voff[-1],)
+        for th in range(8):
+            emitted = []
+            for g in range(goff[th], goff[th + 1]):
+                for u in range(uoff[g], uoff[g + 1]):
+                    emitted.extend(victims[voff[u]:voff[u + 1]].tolist())
+            assert sorted(emitted) == [v for v in range(8) if v != th]
+
+
+# ----------------------------------------------------------------------
+# engine selection satellites
+# ----------------------------------------------------------------------
+
+def test_simresult_reports_engine(engine):
+    wl = bots.fft(n=1 << 8, cutoff=8)
+    r = simulate(TOPO, [0, 1], wl, "wf")
+    assert r.engine == engine
+
+
+def test_engine_choice_tracks_env_and_reset(monkeypatch):
+    wl = bots.fft(n=1 << 8, cutoff=8)
+    monkeypatch.setenv("REPRO_SIM_ENGINE", "py")
+    assert simulate(TOPO, [0, 1], wl, "wf").engine == "py"
+    if HAVE_C:  # cache is keyed on the env value: no reset needed
+        monkeypatch.setenv("REPRO_SIM_ENGINE", "c")
+        assert simulate(TOPO, [0, 1], wl, "wf").engine == "c"
+    monkeypatch.setenv("REPRO_SIM_ENGINE", "bogus")
+    with pytest.raises(ValueError, match="REPRO_SIM_ENGINE"):
+        simulate(TOPO, [0, 1], wl, "wf")
+    reset_engine_cache()  # the test-visible hook
+    monkeypatch.setenv("REPRO_SIM_ENGINE", "py")
+    assert simulate(TOPO, [0, 1], wl, "wf").engine == "py"
+
+
+def test_engine_field_excluded_from_equality():
+    r1 = simulate(TOPO, [0, 1], bots.fft(n=1 << 8, cutoff=8), "wf")
+    import dataclasses
+    r2 = dataclasses.replace(r1, engine="other")
+    assert r1 == r2
+
+
+# ----------------------------------------------------------------------
+# batched sweeps
+# ----------------------------------------------------------------------
+
+def test_sweep_matches_per_call_loop(engine):
+    """A mixed grid (schedulers × threads × workloads × placements) is
+    bit-identical between SweepPlan.run() and the simulate() loop."""
+    wls = [bots.fft(n=1 << 10, cutoff=8), bots.sparselu(n=8)]
+    spill = placement.first_touch_spill(TOPO, 0, 2)
+    plan = SweepPlan()
+    singles = []
+    for wl in wls:
+        for sched in SCHEDULERS:
+            for T in (4, 8):
+                kw = dict(seed=11, root_data_nodes=spill,
+                          runtime_data_node=0, migration_rate=0.1)
+                plan.add(TOPO, list(range(T)), wl, sched, **kw)
+                singles.append(simulate(TOPO, list(range(T)), wl, sched,
+                                        **kw))
+    assert plan.run() == singles
+
+
+def test_sweep_empty_and_config_order(engine):
+    assert SweepPlan().run() == []
+    wl = bots.fft(n=1 << 8, cutoff=8)
+    plan = SweepPlan()
+    plan.add(TOPO, [0, 1], wl, "wf", seed=1)
+    plan.add(TOPO, [0, 1], wl, "bf", seed=1)
+    r = plan.run()
+    assert len(r) == len(plan) == 2
+    assert r[0].steals >= 0 and r[1].queue_wait >= 0
+    assert r[0] == simulate(TOPO, [0, 1], wl, "wf", seed=1)
+
+
+def test_run_sweep_accepts_config_sequence(engine):
+    from repro.core.sim.sweep import SweepConfig
+    wl = bots.fft(n=1 << 8, cutoff=8)
+    cfgs = [SweepConfig(TOPO, (0, 1, 2), wl, "dfwsrpt", seed=3)]
+    assert run_sweep(cfgs) == [simulate(TOPO, [0, 1, 2], wl, "dfwsrpt",
+                                        seed=3)]
+
+
+def test_sweep_serial_reference_defaults(engine):
+    """Without an explicit reference the sweep derives the same serial
+    time (master core + placement) as simulate() does."""
+    wl = bots.strassen(depth=3)
+    plan = SweepPlan()
+    plan.add(TOPO, list(range(6)), wl, "dfwspt", seed=0,
+             root_data_nodes=1)
+    assert plan.run() == [simulate(TOPO, list(range(6)), wl, "dfwspt",
+                                   seed=0, root_data_nodes=1)]
+
+
+@pytest.mark.slow
+def test_figs_grid_sweep_parity():
+    """Acceptance: the full Figs 5–10 grid through the batched planner
+    equals the per-call simulate() loop, speedup for speedup."""
+    import benchmarks.bots_repro as br
+    for name in ("fft", "nqueens"):
+        plan, keys = br.plan_benchmark(name)
+        swept = {k: r.speedup for k, r in zip(keys, plan.run())}
+        wl = br._workload(name)
+        spill0 = placement.first_touch_spill(br.TOPO, 0, br.SPILL[name])
+        from repro.core.sim import serial_time
+        serial = serial_time(br.TOPO, wl, 0, spill0, br.PARAMS)
+        for T in br.THREADS:
+            alloc = priority.allocate_threads(br.TOPO, T)
+            mn = int(br.TOPO.core_node[alloc[0]])
+            spill_n = placement.first_touch_spill(br.TOPO, mn,
+                                                  br.SPILL[name], br.PR)
+            for sched in ("bf", "cilk", "wf"):
+                r = simulate(br.TOPO, list(range(T)), wl, sched,
+                             params=br.PARAMS, seed=0,
+                             root_data_nodes=spill0, runtime_data_node=0,
+                             migration_rate=br.MIGRATION,
+                             serial_reference=serial)
+                assert swept[(sched, "base", T)] == r.speedup, (name, sched, T)
+                r = simulate(br.TOPO, alloc, wl, sched, params=br.PARAMS,
+                             seed=0, root_data_nodes=spill_n,
+                             serial_reference=serial)
+                assert swept[(sched, "numa", T)] == r.speedup, (name, sched, T)
+
+
+# ----------------------------------------------------------------------
+# nqueens paper tier
+# ----------------------------------------------------------------------
+
+def test_nqueens_flat_small_structure():
+    wl = bots.nqueens_flat(n=8, cutoff_depth=3, seed=1)
+    tbl = wl.table
+    assert tbl.parent[0] == -1
+    # internal nodes carry the join continuation, leaves don't
+    internal = tbl.num_children > 0
+    assert np.all(tbl.work_post[internal] == 0.5)
+    assert np.all(tbl.work_post[~internal] == 0.0)
+    # irregular fan-out: not all internal nodes spawn the same count
+    depth1 = tbl.num_children[tbl.parent == 0]
+    assert tbl.num_children.max() > 1
+    # per-level branch bound: children count never exceeds n - depth
+    assert tbl.num_children[0] <= 8
+    assert depth1.max() <= 7
+    # deterministic per seed, different across seeds
+    w2 = bots.nqueens_flat(n=8, cutoff_depth=3, seed=1)
+    assert np.array_equal(tbl.work_pre, w2.table.work_pre)
+    w3 = bots.nqueens_flat(n=8, cutoff_depth=3, seed=2)
+    assert not np.array_equal(tbl.work_pre, w3.table.work_pre)
+
+
+def test_nqueens_flat_simulates(engine):
+    wl = bots.nqueens_flat(n=7, cutoff_depth=3, seed=0)
+    r = simulate(TOPO, list(range(8)), wl, "dfwsrpt", seed=4)
+    assert r.makespan > 0 and r.tasks == wl.table.n
+
+
+def test_nqueens_flat_validation():
+    with pytest.raises(ValueError):
+        bots.nqueens_flat(n=4, cutoff_depth=0)
+    with pytest.raises(ValueError):
+        bots.nqueens_flat(n=3, cutoff_depth=5)
+
+
+@pytest.mark.slow
+def test_nqueens_paper_scale():
+    wl = bots.make("nqueens", "paper")
+    assert wl.table.n >= bots.PAPER_MIN_TASKS
+    alloc = priority.allocate_threads(TOPO, 16)
+    r = simulate(TOPO, alloc, wl, "dfwsrpt", seed=0)
+    assert r.makespan > 0 and r.steals > 0

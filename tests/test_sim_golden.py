@@ -1,11 +1,13 @@
 """Golden-parity tests for the flat simulation engine.
 
 ``tests/data/sim_golden.json`` holds metrics recorded from the original
-(seed) pure-Python object-based engine for all 5 schedulers × 2 small
-workloads × 2 topologies (+ one unbound-baseline variant exercising
-migration and centralized runtime data). The flat engine — in both its
-pure-Python and compiled-C forms — must reproduce every metric exactly:
-the rewrite preserves behavior draw-for-draw, not just statistically.
+(seed) pure-Python object-based engine for all 5 stock schedulers × 2
+small workloads × 2 topologies (+ one unbound-baseline variant
+exercising migration and centralized runtime data), plus fixtures for
+the policy-layer scheduler ``dfwshier`` recorded from the flat Python
+engine. The flat engine — in both its pure-Python and compiled-C forms
+— must reproduce every metric exactly: the rewrite preserves behavior
+draw-for-draw, not just statistically.
 """
 
 import json
@@ -23,7 +25,7 @@ GOLD = json.load(open(os.path.join(os.path.dirname(__file__), "data",
                                    "sim_golden.json")))
 TOPOS = {"sunfire": topology.sunfire_x4600(),
          "tpu2x4": topology.tpu_pod_2d(2, 4)}
-SCHEDS = ("bf", "cilk", "wf", "dfwspt", "dfwsrpt")
+SCHEDS = ("bf", "cilk", "wf", "dfwspt", "dfwsrpt", "dfwshier")
 METRICS = ("makespan", "speedup", "steals", "failed_probes",
            "remote_work_fraction", "queue_wait", "tasks")
 
