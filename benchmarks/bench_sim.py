@@ -1,6 +1,8 @@
-"""Simulation-engine micro-benchmark: times `simulate()` across
-schedulers, workload scales, and engines, and writes ``BENCH_sim.json``
-so future PRs can track performance trajectories.
+"""Simulation-engine micro-benchmark: times facade runs
+(``Machine.run`` under the cached paper-binding context — the
+``simulate()`` code path) across schedulers, workload scales, and
+engines, and writes ``BENCH_sim.json`` so future PRs can track
+performance trajectories.
 
 Methodology: per configuration we report
 
@@ -12,9 +14,9 @@ Methodology: per configuration we report
     workloads) actually runs in;
   * ``tasks_per_s`` — warm throughput.
 
-A separate ``sweep`` section times the batched :class:`SweepPlan` path
+A separate ``sweep`` section times the batched ``Machine.grid()`` path
 on the fft-medium (5 stock schedulers × 6 thread counts) grid against
-the sum of the equivalent warm per-call ``simulate()`` loop — the
+the sum of the equivalent warm per-call ``Machine.run()`` loop — the
 batch amortizes per-config setup and, on the C engine, runs the whole
 grid in one kernel call.
 
@@ -39,9 +41,9 @@ import platform
 import sys
 import time
 
-from repro.core import priority, topology
-from repro.core.sim import (SCHEDULERS, SweepPlan, bots, ensure_table,
-                            reset_engine_cache, simulate)
+from repro.core import topology
+from repro.core.sim import (SCHEDULERS, Machine, bots, ensure_table,
+                            reset_engine_cache)
 from repro.core.sim import _csim
 
 # the five stock schedulers benched against the committed baseline;
@@ -58,6 +60,7 @@ def _workloads(quick: bool):
         yield ("sort", "paper", lambda: bots.make("sort", "paper"))
         yield ("strassen", "paper", lambda: bots.make("strassen", "paper"))
         yield ("nqueens", "paper", lambda: bots.make("nqueens", "paper"))
+        yield ("sparselu", "paper", lambda: bots.make("sparselu", "paper"))
 
 
 class _engine_env:
@@ -83,8 +86,9 @@ def _engines():
 
 
 def bench(quick: bool = False, reps: int = 5, threads: int = 16):
-    topo = topology.sunfire_x4600()
-    alloc = priority.allocate_threads(topo, threads)
+    machine = Machine(topology.sunfire_x4600())
+    # the paper's priority binding, compiled once and cached
+    ctx = machine.context(threads, binding="paper")
     engines = _engines()
     for name, scale, build in _workloads(quick):
         # the py engine sits out the ≥1M-task tier (minutes per call;
@@ -105,13 +109,13 @@ def bench(quick: bool = False, reps: int = 5, threads: int = 16):
                     wl_cold = build()
                     build_s = time.perf_counter() - t0
                     t0 = time.perf_counter()
-                    r = simulate(topo, alloc, wl_cold, sched, seed=0)
+                    r = machine.run(wl_cold, sched, seed=0, context=ctx)
                     cold_s = time.perf_counter() - t0
                     # warm: steady state (table + serial ref cached)
                     warm = []
                     for _ in range(reps):
                         t0 = time.perf_counter()
-                        r = simulate(topo, alloc, wl_cold, sched, seed=0)
+                        r = machine.run(wl_cold, sched, seed=0, context=ctx)
                         warm.append(time.perf_counter() - t0)
                     warm_s = min(warm)
                     tasks = ensure_table(wl_cold).n
@@ -127,38 +131,39 @@ def bench(quick: bool = False, reps: int = 5, threads: int = 16):
 
 def bench_sweep(reps: int = 3):
     """Batched-sweep amortization: fft-medium, 5 schedulers × 6 thread
-    counts, sweep wall-clock vs the sum of warm per-call simulate()."""
-    topo = topology.sunfire_x4600()
+    counts, one ``Machine.grid()`` wall-clock vs the sum of warm
+    per-call ``Machine.run()``."""
+    machine = Machine(topology.sunfire_x4600())
     wl = bots.fft(n=1 << 15, cutoff=4)
     thread_counts = (2, 4, 6, 8, 12, 16)
-    grid = [(sched, T) for sched in STOCK for T in thread_counts]
+
+    def make_grid():
+        return machine.grid(workloads=[wl], schedulers=STOCK,
+                            threads=thread_counts)
+
+    cells = make_grid().keys
     out = []
     for engine in _engines():
         with _engine_env(engine):
             # warm every shared cache (tables, plans, serial refs) so
             # both timings measure the steady-state dispatch regime
-            for sched, T in grid:
-                simulate(topo, priority.allocate_threads(topo, T), wl,
-                         sched, seed=0)
+            for k in cells:
+                machine.run(wl, k.scheduler, seed=k.seed,
+                            threads=k.threads)
             loop_s = float("inf")
             sweep_s = float("inf")
             for _ in range(reps):
                 t0 = time.perf_counter()
-                loop_res = [simulate(topo,
-                                     priority.allocate_threads(topo, T),
-                                     wl, sched, seed=0)
-                            for sched, T in grid]
+                loop_res = [machine.run(wl, k.scheduler, seed=k.seed,
+                                        threads=k.threads) for k in cells]
                 loop_s = min(loop_s, time.perf_counter() - t0)
                 t0 = time.perf_counter()
-                plan = SweepPlan()
-                for sched, T in grid:
-                    plan.add(topo, priority.allocate_threads(topo, T),
-                             wl, sched, seed=0)
-                sweep_res = plan.run()
+                sweep_res = make_grid().run()
                 sweep_s = min(sweep_s, time.perf_counter() - t0)
-            assert sweep_res == loop_res, "sweep diverged from per-call loop"
+            assert list(sweep_res.values()) == loop_res, \
+                "sweep diverged from per-call loop"
             out.append(dict(
-                grid="fft-medium x 5 sched x 6 T", configs=len(grid),
+                grid="fft-medium x 5 sched x 6 T", configs=len(cells),
                 engine=engine, loop_s=round(loop_s, 6),
                 sweep_s=round(sweep_s, 6),
                 amortization=round(loop_s / sweep_s, 3)))
@@ -218,10 +223,14 @@ def main() -> None:
                          "committed full baseline isn't overwritten)")
     ap.add_argument("--check", action="store_true",
                     help="compare fresh warm_s against the committed "
-                         "baseline; exit non-zero on >25%% regression "
+                         "baseline; exit non-zero on regression "
                          "(does not rewrite the baseline)")
     ap.add_argument("--baseline", default="BENCH_sim.json",
                     help="baseline file for --check")
+    ap.add_argument("--threshold", type=float, default=0.25,
+                    help="--check relative regression threshold "
+                         "(0.25 = 25%%; CI uses 1.5 — hosted runners "
+                         "are not the baseline container)")
     args = ap.parse_args()
 
     rows = []
@@ -236,7 +245,7 @@ def main() -> None:
               flush=True)
 
     if args.check:
-        sys.exit(1 if check(rows, args.baseline) else 0)
+        sys.exit(1 if check(rows, args.baseline, args.threshold) else 0)
 
     # the sweep section is a full 30-config grid per engine — skip it in
     # quick smoke runs

@@ -6,27 +6,26 @@ One function per paper figure:
   * Figs 13–15 — NUMA-aware task schedulers: FFT / Sort / Strassen under
     {wf, DFWSPT, DFWSRPT} (all with the allocation technique, as in §VI).
 
-Baseline Nanos model: threads unbound (OS migrations), runtime structures
-first-touched on node 0, root arrays spilled from node 0. NUMA model:
-priority-bound threads, local runtime data, arrays spilled from the
-master's (priority-chosen) node. One common serial reference per
-benchmark, as the paper uses one serial time per benchmark.
-
-Each figure suite assembles its whole grid into one
-:class:`~repro.core.sim.SweepPlan` and runs it in a single batched
-engine call (bit-identical to the per-``simulate()`` loop); the
-compiled task tables, victim plans, spill distance vectors, and serial
-references are shared across every config of the grid.
+Each figure is one declarative :meth:`Machine.grid` call: the execution
+variants are context specs — baseline Nanos is ``binding="linear"``
+(OS enumeration order, threads unbound → migrations) + ``spill:K@0``
+(runtime and root arrays first-touched on node 0, stock Linux node-id
+spill walk), the paper's NUMA model is ``binding="paper"`` (priority
+allocation) + ``spill:K`` (spill from the master's priority-chosen
+node) — and the cartesian product expands straight into one batched
+:class:`~repro.core.sim.SweepPlan` engine call, bit-identical to the
+per-``simulate()`` loop. One common serial reference per benchmark, as
+the paper uses one serial time per benchmark.
 """
 
 from __future__ import annotations
 
-from repro.core import placement, priority, topology
-from repro.core.sim import SimParams, SweepPlan, bots, serial_time
+from repro.core import topology
+from repro.core.sim import Grid, Machine, SimParams, bots
 
 TOPO = topology.sunfire_x4600()
-PR = priority.priorities(TOPO)
 PARAMS = SimParams()
+MACHINE = Machine(TOPO, PARAMS)
 THREADS = (2, 4, 6, 8, 12, 16)
 MIGRATION = 0.15
 
@@ -54,40 +53,38 @@ def _workload(name):
     return wl
 
 
-def plan_benchmark(name: str, schedulers=("bf", "cilk", "wf"),
-                   threads=THREADS, seed: int = 0):
-    """Build the (scheduler × variant × T) grid for one BOTS benchmark.
+def variants(name: str) -> dict:
+    """The figure variants: baseline Nanos vs the paper's NUMA model."""
+    k = SPILL[name]
+    return {
+        "base": dict(binding="linear", placement=f"spill:{k}@0",
+                     runtime_data=0, migration_rate=MIGRATION),
+        "numa": dict(binding="paper", placement=f"spill:{k}"),
+    }
 
-    Returns ``(plan, keys)`` — run ``plan`` (alone or merged into a
-    bigger sweep) and zip the results against ``keys``.
-    """
-    wl = _workload(name)
-    spill0 = placement.first_touch_spill(TOPO, 0, SPILL[name])
-    serial = serial_time(TOPO, wl, 0, spill0, PARAMS)
-    plan = SweepPlan()
-    keys = []
-    for T in threads:
-        base_cores = list(range(T))
-        alloc = priority.allocate_threads(TOPO, T)
-        mn = int(TOPO.core_node[alloc[0]])
-        spill_n = placement.first_touch_spill(TOPO, mn, SPILL[name], PR)
-        for sched in schedulers:
-            plan.add(TOPO, base_cores, wl, sched, params=PARAMS,
-                     seed=seed, root_data_nodes=spill0,
-                     runtime_data_node=0, migration_rate=MIGRATION,
-                     serial_reference=serial)
-            keys.append((sched, "base", T))
-            plan.add(TOPO, alloc, wl, sched, params=PARAMS, seed=seed,
-                     root_data_nodes=spill_n, serial_reference=serial)
-            keys.append((sched, "numa", T))
-    return plan, keys
+
+def _serial(name: str) -> float:
+    """One serial reference per benchmark: the boot core with the
+    baseline data placement, as the paper measures it."""
+    return MACHINE.serial_time(_workload(name),
+                               placement=f"spill:{SPILL[name]}@0")
+
+
+def plan_benchmark(name: str, schedulers=("bf", "cilk", "wf"),
+                   threads=THREADS, seed: int = 0) -> Grid:
+    """The (scheduler × variant × T) grid for one BOTS benchmark."""
+    return MACHINE.grid(
+        workloads={name: _workload(name)}, schedulers=schedulers,
+        threads=threads, contexts=variants(name), seeds=(seed,),
+        serial_reference=_serial(name))
 
 
 def run_benchmark(name: str, schedulers=("bf", "cilk", "wf"),
                   threads=THREADS, seed: int = 0):
     """Returns {(sched, variant, T): speedup} for one BOTS benchmark."""
-    plan, keys = plan_benchmark(name, schedulers, threads, seed)
-    return {k: r.speedup for k, r in zip(keys, plan.run())}
+    return {(k.scheduler, k.context, k.threads): r.speedup
+            for k, r in plan_benchmark(name, schedulers, threads,
+                                       seed).run().items()}
 
 
 def fig_5_to_10(report, quick=False):
@@ -114,23 +111,18 @@ def fig_13_to_15(report, quick=False):
     """
     threads = (16,) if quick else (2, 4, 8, 16)
     scheds = ("wf", "dfwspt", "dfwsrpt", "dfwshier")
-    plan = SweepPlan()
-    keys = []
-    for name in ("fft", "sort", "strassen"):
-        wl = _workload(name)
-        spill0 = placement.first_touch_spill(TOPO, 0, SPILL[name])
-        serial = serial_time(TOPO, wl, 0, spill0, PARAMS)
-        for T in threads:
-            alloc = priority.allocate_threads(TOPO, T)
-            mn = int(TOPO.core_node[alloc[0]])
-            spill = placement.first_touch_spill(TOPO, mn, SPILL[name], PR)
-            for sched in scheds:
-                plan.add(TOPO, alloc, wl, sched, params=PARAMS,
-                         seed=0, root_data_nodes=spill,
-                         serial_reference=serial)
-                keys.append((name, T, sched))
-    speedups = {k: r.speedup for k, r in zip(keys, plan.run())}
-    for name in ("fft", "sort", "strassen"):
+    names = ("fft", "sort", "strassen")
+    # per-benchmark spill sizes → one grid per workload, fused into a
+    # single batched engine call
+    grid = Grid.concat([
+        MACHINE.grid(workloads={name: _workload(name)}, schedulers=scheds,
+                     threads=threads,
+                     contexts={"numa": variants(name)["numa"]},
+                     serial_reference=_serial(name))
+        for name in names])
+    speedups = {(k.workload, k.threads, k.scheduler): r.speedup
+                for k, r in grid.run().items()}
+    for name in names:
         T = threads[-1]
         sp = {sched: speedups[(name, T, sched)] for sched in scheds}
         g1 = (sp["dfwspt"] / sp["wf"] - 1) * 100

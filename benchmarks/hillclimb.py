@@ -1,9 +1,13 @@
 """§Perf hillclimbs: hypothesis → change → re-lower → measure.
 
-Three cells (see EXPERIMENTS.md §Perf for selection rationale). Each
-variant re-compiles the cell with one change and records the roofline
-terms; results land in artifacts/hillclimb/ and the comparison table is
-printed for the §Perf log.
+Three roofline cells (see EXPERIMENTS.md §Perf for selection rationale)
+plus a simulator *strategy* hillclimb (``--cell 4``): the paper's own
+progression — baseline Nanos → +priority binding → +master-node spill →
++NUMA-aware stealing — expressed as one-context-knob-at-a-time
+:class:`~repro.core.sim.Machine` variants, so each step isolates one
+declarative change exactly like the roofline cells isolate one config
+override. Results land in artifacts/hillclimb/ and the comparison table
+is printed for the §Perf log.
 
     PYTHONPATH=src python -m benchmarks.hillclimb [--cell N]
 """
@@ -107,10 +111,56 @@ def cell_jamba():
     return _show(rows)
 
 
+def cell_sim():
+    """NUMA-strategy hillclimb on the NANOS simulator (fft medium @ 16).
+
+    Each variant flips exactly one execution-context knob relative to
+    the previous row — the paper's §IV→§V→§VI progression, plus the
+    policy layer's hierarchical-stealing step beyond it.
+    """
+    from repro.core import topology
+    from repro.core.sim import Machine, bots
+
+    m = Machine(topology.sunfire_x4600())
+    wl = bots.fft(n=1 << 15, cutoff=4)
+    serial = m.serial_time(wl, placement="spill:2@0")
+    base = dict(placement="spill:2@0", runtime_data=0, migration_rate=0.15)
+    variants = [
+        ("baseline-nanos", "wf", dict(binding="linear", **base)),
+        ("+priority-binding", "wf", dict(binding="paper", **base)),
+        ("+pin-threads", "wf",
+         dict(binding="paper", placement="spill:2@0", runtime_data=0)),
+        ("+local-runtime", "wf",
+         dict(binding="paper", placement="spill:2@0")),
+        ("+master-spill", "wf", dict(binding="paper", placement="spill:2")),
+        ("+dfwsrpt-stealing", "dfwsrpt",
+         dict(binding="paper", placement="spill:2")),
+        ("hier-stealing", "dfwshier",
+         dict(binding="paper", placement="spill:2")),
+    ]
+    rows = []
+    print(f"{'variant':22s} {'sched':10s} {'speedup':>8} {'remote%':>8} "
+          f"{'steals':>8} {'queue_wait':>10}")
+    for label, sched, ctx_kw in variants:
+        r = m.run(wl, sched, seed=0, threads=16, serial_reference=serial,
+                  **ctx_kw)
+        rows.append(dict(variant=label, scheduler=sched,
+                         speedup=round(r.speedup, 4),
+                         remote_work_fraction=round(r.remote_work_fraction,
+                                                    4),
+                         steals=r.steals,
+                         queue_wait=round(r.queue_wait, 2)))
+        print(f"{label:22s} {sched:10s} {r.speedup:8.2f} "
+              f"{r.remote_work_fraction * 100:8.2f} {r.steals:8d} "
+              f"{r.queue_wait:10.1f}")
+    return rows
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--cell", type=int, default=0,
-                    help="1=granite 2=command-r 3=jamba; 0=all")
+                    help="1=granite 2=command-r 3=jamba 4=sim-strategy; "
+                         "0=all")
     args = ap.parse_args()
     os.makedirs(ART, exist_ok=True)
     out = {}
@@ -123,6 +173,9 @@ def main():
     if args.cell in (0, 3):
         print("== jamba-1.5-large-398b × train_4k × single ==")
         out["jamba"] = cell_jamba()
+    if args.cell in (0, 4):
+        print("== NANOS sim × fft-medium × NUMA strategy ==")
+        out["sim"] = cell_sim()
     with open(os.path.join(ART, "summary.json"), "w") as f:
         json.dump(out, f, indent=1)
 

@@ -1,54 +1,81 @@
 """Quickstart: the paper's technique end to end in five minutes on CPU.
 
-1. Model the machine (hop-distance topology).
-2. Compute the paper's core priorities and bind "threads" (mesh slots).
-3. Run the NANOS simulator on a BOTS workload: baseline vs NUMA-aware.
-4. Route MoE tokens with locality-aware overflow stealing (the SPMD
+1. Model the machine (hop-distance topology) as a `Machine`.
+2. Compute the paper's core priorities; the `"paper"` binding compiles
+   them into a thread→core map.
+3. Run the NANOS simulator on a BOTS workload: baseline Nanos vs the
+   paper's NUMA-aware execution context — two declarative contexts.
+4. Sweep a whole figure grid with one `Machine.grid` call.
+5. Route MoE tokens with locality-aware overflow stealing (the SPMD
    adaptation of DFWSPT).
-5. Train a tiny LM for a few steps with the full production loop.
+6. Train a tiny LM for a few steps with the full production loop.
 
-    PYTHONPATH=src python examples/quickstart.py
+    PYTHONPATH=src python examples/quickstart.py [--sim-only]
 """
 
-import jax
-import numpy as np
+import argparse
 
-from repro.core import placement, priority, topology
-from repro.core.routing import RoutingConfig, expert_steal_table, route
-from repro.core.sim import bots, serial_time, simulate
-from repro.launch import train
+from repro.core import priority, topology
+from repro.core.sim import Machine, bots
 
 
-def main():
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--sim-only", action="store_true",
+                    help="CI smoke: skip the jax-heavy steps (MoE "
+                         "routing + training)")
+    sim_only = ap.parse_args(argv).sim_only
+
     # -- 1. the paper's machine ---------------------------------------
     topo = topology.sunfire_x4600()
+    m = Machine(topo)
     print(f"machine: {topo.name}: {topo.num_cores} cores / "
           f"{topo.num_nodes} NUMA nodes, ≤{topo.max_distance()} hops")
 
     # -- 2. priorities (Figs 2–4) + thread binding --------------------
     pr = priority.priorities(topo)
-    alloc = priority.allocate_threads(topo, 16)
+    ctx = m.context(threads=16, binding="paper", placement="spill:2")
     print(f"core priorities: min={pr.total.min():.1f} "
           f"max={pr.total.max():.1f}")
-    print(f"master core: {alloc[0]} (node {topo.core_node[alloc[0]]}) — "
-          f"the topology centroid")
+    print(f"master core: {ctx.master_core} (node {ctx.master_node}) — "
+          f"the topology centroid; root arrays spill over nodes "
+          f"{ctx.root_data_nodes}")
 
     # -- 3. simulator: baseline Nanos vs the paper --------------------
+    # Two declarative execution contexts: baseline Nanos (threads in OS
+    # enumeration order and unbound, runtime + root data first-touched
+    # on node 0) vs the paper's (priority binding, local runtime data,
+    # spill from the master's node). One shared serial reference.
     wl = bots.fft(n=1 << 14, cutoff=4)
-    spill0 = placement.first_touch_spill(topo, 0, 2)
-    serial = serial_time(topo, wl, 0, spill0)
-    base = simulate(topo, list(range(16)), wl, "wf", seed=0,
-                    root_data_nodes=spill0, runtime_data_node=0,
-                    migration_rate=0.15, serial_reference=serial)
-    mn = int(topo.core_node[alloc[0]])
-    spill = placement.first_touch_spill(topo, mn, 2, pr)
-    numa = simulate(topo, alloc, wl, "dfwspt", seed=0,
-                    root_data_nodes=spill, serial_reference=serial)
+    serial = m.serial_time(wl, placement="spill:2@0")
+    base = m.run(wl, "wf", seed=0, serial_reference=serial,
+                 threads=16, binding="linear", placement="spill:2@0",
+                 runtime_data=0, migration_rate=0.15)
+    numa = m.run(wl, "dfwspt", seed=0, serial_reference=serial,
+                 context=ctx)
     print(f"FFT@16: baseline wf {base.speedup:.2f}x → "
           f"NUMA-aware DFWSPT {numa.speedup:.2f}x "
           f"({(numa.speedup/base.speedup-1)*100:+.1f}%)")
 
-    # -- 4. the SPMD adaptation: locality-aware MoE overflow ----------
+    # -- 4. a whole paper figure as one declarative grid --------------
+    grid = m.grid(workloads=[wl], schedulers=("wf", "dfwspt", "dfwsrpt"),
+                  threads=(4, 16), placements=("spill:2",),
+                  serial_reference=serial)
+    res = grid.run()    # one batched engine call, {GridKey: SimResult}
+    row = " ".join(f"{k.scheduler}@{k.threads}={r.speedup:.2f}x"
+                   for k, r in res.items())
+    print(f"grid ({len(res)} cells, 1 batched call): {row}")
+
+    if sim_only:
+        print("(--sim-only: skipping MoE routing + training steps)")
+        return
+
+    # -- 5. the SPMD adaptation: locality-aware MoE overflow ----------
+    import jax
+    import numpy as np
+
+    from repro.core.routing import RoutingConfig, expert_steal_table, route
+
     pod = topology.tpu_pod_2d(4, 4)
     table = expert_steal_table(pod, np.arange(16), "dfwspt")
     logits = jax.random.normal(jax.random.PRNGKey(0), (256, 16))
@@ -59,7 +86,9 @@ def main():
           f"→ {float(local['drop_fraction']):.1%} with nearest-first "
           f"stealing")
 
-    # -- 5. the production loop at toy scale --------------------------
+    # -- 6. the production loop at toy scale --------------------------
+    from repro.launch import train
+
     print("\ntraining a reduced qwen2.5 for 30 steps:")
     train.main(["--arch", "qwen2.5-3b", "--reduced", "--steps", "30",
                 "--global-batch", "4", "--seq-len", "64",

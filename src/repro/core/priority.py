@@ -32,7 +32,7 @@ from typing import Sequence
 
 import numpy as np
 
-from .topology import Topology
+from .topology import Topology, lazy_cache
 
 __all__ = [
     "default_weights",
@@ -66,11 +66,24 @@ class PriorityResult:
         return order
 
 
+def _memo_key(weights, available, *rest):
+    """Hashable cache key for the per-topology memo tables below."""
+    wk = None if weights is None else tuple(np.asarray(weights,
+                                                      np.float64).tolist())
+    ak = None if available is None else tuple(int(c) for c in available)
+    return (wk, ak) + rest
+
+
 def priorities(topo: Topology,
                weights: np.ndarray | None = None,
                available: Sequence[int] | None = None,
                occupied_penalty: float = 0.0) -> PriorityResult:
     """Compute per-core priorities on ``topo`` per the paper's algorithm.
+
+    Memoized on the (immutable) topology per (weights, available,
+    occupied_penalty) — like ``_root_dist_cache`` — because benchmark
+    sweeps recompute the identical result hundreds of times per grid.
+    The returned arrays are shared; treat them as read-only.
 
     Args:
       topo: the machine.
@@ -82,6 +95,11 @@ def priorities(topo: Topology,
       occupied_penalty: subtractive weight for occupied cores (0 = simply
         excluded, matching the strict reading).
     """
+    cache = lazy_cache(topo, "_priority_cache")
+    key = _memo_key(weights, available, float(occupied_penalty))
+    hit = cache.get(key)
+    if hit is not None:
+        return hit
     n = topo.num_cores
     dist = topo.core_distance_matrix()
     maxd = topo.max_distance()
@@ -124,7 +142,11 @@ def priorities(topo: Topology,
 
     total = p_old + v2
     total = np.where(free, total, -np.inf)
-    return PriorityResult(base=base, v1=v1, v2=v2, total=total)
+    result = PriorityResult(base=base, v1=v1, v2=v2, total=total)
+    for arr in (result.base, result.v1, result.v2, result.total):
+        arr.flags.writeable = False     # the memoized arrays are shared
+    cache[key] = result
+    return result
 
 
 def allocate_threads(topo: Topology,
@@ -139,7 +161,16 @@ def allocate_threads(topo: Topology,
     Policy (paper §IV): master → highest-priority core (random among
     ties); worker k → unbound core closest to the master's core, ties by
     higher priority, then random.
+
+    Memoized on the topology per (num_threads, weights, available,
+    seed): the O(n²) allocation is identical across the hundreds of
+    sweep configs that share a thread count, so it is computed once.
     """
+    cache = lazy_cache(topo, "_alloc_cache")
+    key = _memo_key(weights, available, int(num_threads), int(seed))
+    hit = cache.get(key)
+    if hit is not None:
+        return list(hit)
     pr = priorities(topo, weights=weights, available=available)
     rng = np.random.RandomState(seed)
     total = pr.total
@@ -169,4 +200,5 @@ def allocate_threads(topo: Topology,
         pick = int(cand[rng.randint(cand.size)])
         bound.append(pick)
         is_free[pick] = False
+    cache[key] = tuple(bound)
     return bound

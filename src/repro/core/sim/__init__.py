@@ -1,6 +1,10 @@
 from .runtime import (TaskSpec, Workload, SimParams, SimResult, simulate,
-                      serial_time, SCHEDULERS, SchedulerSpec, TaskTable,
-                      ensure_table, reset_engine_cache)
+                      run_context, serial_time, SCHEDULERS, SchedulerSpec,
+                      TaskTable, ensure_table, reset_engine_cache)
 from .policy import register, get_spec, compile_victim_plan
+from .context import (BindingSpec, PlacementSpec, ExecContext, BINDINGS,
+                      PLACEMENTS, register_binding, register_placement,
+                      get_binding, get_placement)
+from .machine import Machine, Grid, GridKey
 from .sweep import SweepConfig, SweepPlan, run_sweep
-from . import bots, policy, sweep
+from . import bots, context, machine, policy, sweep

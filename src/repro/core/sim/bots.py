@@ -21,7 +21,7 @@ from .table import table_from_arrays
 
 __all__ = ["fft", "sort", "strassen", "nqueens", "floorplan", "sparselu",
            "fft_flat", "sort_flat", "strassen_flat", "nqueens_flat",
-           "WORKLOADS", "make", "PAPER_MIN_TASKS"]
+           "sparselu_flat", "WORKLOADS", "make", "PAPER_MIN_TASKS"]
 
 # the paper-scale tier targets BOTS-like task counts (FFT medium spawns
 # ~10M tasks); anything above this floor exercises the same regimes.
@@ -312,6 +312,43 @@ def nqueens_flat(n: int = 16, cutoff_depth: int = 6,
     return Workload("nqueens", None, mem_intensity=0.15, table=tbl)
 
 
+def sparselu_flat(n: int = 240) -> Workload:
+    """Paper-scale twin of :func:`sparselu` (flat CSR, no tree).
+
+    SparseLU is the one BOTS benchmark whose parallelism is a
+    *sequential outer chain*: step k factorizes a diagonal block, spawns
+    a wave of ~k²/4 block updates, and only then (post-taskwait) steps
+    to k-1. The chain folds directly into the level-by-level CSR
+    layout: BFS id order is [step, its wave..., next step, its wave...]
+    because wave tasks are leaves — so the whole table is two
+    ``np.repeat`` patterns over the chain, never a TaskSpec. For equal
+    ``n`` this is an exact twin of ``compile_tree(sparselu(n).root)``
+    (covered by tests); the default ``n=240`` gives ~1.14M tasks, the
+    BOTS-large regime.
+    """
+    if n < 2:
+        raise ValueError("sparselu needs n >= 2")
+    ks = np.arange(n - 1, 0, -1, dtype=np.int64)
+    wcounts = np.maximum(1, ks * ks // 4)
+    # interleaved [chain node, its wave] segments, one pair per k
+    counts = np.empty(2 * ks.size, np.int64)
+    counts[0::2] = 1
+    counts[1::2] = wcounts
+
+    def pat(chain_vals, wave_val, dt=np.float64):
+        vals = np.empty(2 * ks.size, dt)
+        vals[0::2] = chain_vals
+        vals[1::2] = wave_val
+        return np.repeat(vals, counts)
+
+    npw_chain = np.ones(ks.size, np.int64)
+    npw_chain[-1] = 0           # k == 1 ends the chain
+    tbl = table_from_arrays(
+        pat(10.0, 30.0), pat(2.0, 0.0), pat(0.6, 0.6), pat(0.1, 0.2),
+        pat(wcounts, 0, np.int64), pat(npw_chain, 0, np.int64))
+    return Workload("sparselu", None, mem_intensity=0.7, table=tbl)
+
+
 WORKLOADS = {
     "fft": fft, "sort": sort, "strassen": strassen,
     "nqueens": nqueens, "floorplan": floorplan, "sparselu": sparselu,
@@ -319,7 +356,7 @@ WORKLOADS = {
 
 PAPER_BUILDERS = {
     "fft": fft_flat, "sort": sort_flat, "strassen": strassen_flat,
-    "nqueens": nqueens_flat,
+    "nqueens": nqueens_flat, "sparselu": sparselu_flat,
 }
 
 

@@ -54,7 +54,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Sequence
 
-from ..topology import Topology
+from ..topology import Topology, lazy_cache
 
 __all__ = [
     "SchedulerSpec", "VictimPlan", "SCHEDULERS",
@@ -210,10 +210,7 @@ def compile_victim_plan(spec: SchedulerSpec, topo: Topology,
     that shares a binding.
     """
     cores = tuple(int(c) for c in thread_cores)
-    cache = topo.__dict__.get("_victim_plan_cache")
-    if cache is None:
-        cache = {}
-        object.__setattr__(topo, "_victim_plan_cache", cache)
+    cache = lazy_cache(topo, "_victim_plan_cache")
     key = (spec.victim, cores)
     plan = cache.get(key)
     if plan is None:

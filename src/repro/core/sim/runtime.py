@@ -55,9 +55,24 @@ Engine architecture (this module is the public API):
   choice is validated once and cached until the variable changes —
   ``reset_engine_cache()`` drops it, and ``SimResult.engine`` reports
   the engine that actually ran).
+* the *execution context* — who runs where, where data lives — is
+  declarative too: a :class:`~.context.BindingSpec` (thread→core
+  mapping; ``"paper"`` priority-based, ``"linear"``, ``"scatter"``,
+  ``"node_fill"``, explicit lists) and a
+  :class:`~.context.PlacementSpec` (root-array placement;
+  ``"first_touch"``, ``"spill:K"``, ``"spill:K@N"``, ``"interleave"``,
+  explicit nodes) lower once per (topology, T, seed) into the cached
+  core/node tuples of an immutable :class:`~.context.ExecContext`.
+  :func:`run_context` is the engine entry point that consumes one;
+  the positional :func:`simulate` below is a thin shim that wraps its
+  raw arguments into an explicit context. The
+  :class:`~.machine.Machine` facade compiles, caches, and sweeps
+  contexts: ``Machine(topo).context(threads=16, binding="paper",
+  placement="spill:2")``.
 * many-config grids (the paper's figure sweeps) should go through
   :mod:`.sweep`: a ``SweepPlan`` shares every compiled artifact across
-  configs and the C path runs the whole batch in one call.
+  configs and the C path runs the whole batch in one call —
+  ``Machine.grid(...)`` expands a cartesian product straight into one.
 """
 
 from __future__ import annotations
@@ -68,15 +83,16 @@ from typing import Optional, Sequence
 
 import numpy as np
 
-from ..topology import Topology
+from ..topology import Topology, lazy_cache
 from . import _csim, _engine_py, policy
+from .context import ExecContext
 from .policy import SCHEDULERS, SchedulerSpec
 from .table import TaskTable, compile_tree
 
 __all__ = [
     "TaskSpec", "Workload", "SimParams", "SimResult", "simulate",
-    "serial_time", "SCHEDULERS", "SchedulerSpec", "TaskTable",
-    "ensure_table", "reset_engine_cache",
+    "run_context", "serial_time", "SCHEDULERS", "SchedulerSpec",
+    "TaskTable", "ensure_table", "reset_engine_cache",
 ]
 
 
@@ -141,7 +157,7 @@ def ensure_table(workload: Workload) -> TaskTable:
     return tbl
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(frozen=True)
 class SimParams:
     hop_lambda: float = 0.4         # NUMA factor slope per hop (exec)
     hop_lambda_steal: float = 2.0   # per-hop slope for steal probes
@@ -185,10 +201,7 @@ def _root_data_setup(topo: Topology, core: int, root_data_nodes):
         root_data_nodes = [int(root_data_nodes)]
     else:
         root_data_nodes = [int(n) for n in root_data_nodes]
-    cache = topo.__dict__.get("_root_dist_cache")
-    if cache is None:
-        cache = {}
-        object.__setattr__(topo, "_root_dist_cache", cache)
+    cache = lazy_cache(topo, "_root_dist_cache")
     key = tuple(root_data_nodes)
     root_dist = cache.get(key)
     if root_dist is None:
@@ -280,28 +293,24 @@ def _select_engine() -> str:
     return engine
 
 
-def _prepare_ctx(topo: Topology,
-                 thread_cores: Sequence[int],
+def _prepare_ctx(ectx: ExecContext,
                  workload: Workload,
                  spec: SchedulerSpec,
-                 p: SimParams,
-                 seed: int,
-                 root_data_nodes,
-                 runtime_data_node,
-                 migration_rate: float) -> dict:
-    """Assemble one engine-ready simulation context.
+                 seed: int) -> dict:
+    """Lower one :class:`ExecContext` into an engine-ready dict.
 
     Every compiled artifact is cached where sweeps can share it: the
     task table on the workload, the victim plan and root-distance
     vectors on the topology, the serial reference on the table.
     """
-    T = len(thread_cores)
-    cores = [int(c) for c in thread_cores]
+    topo = ectx.topo
+    p = ectx.params
+    cores = [int(c) for c in ectx.thread_cores]
     tbl = ensure_table(workload)
     root_data_nodes, root_dist = _root_data_setup(topo, cores[0],
-                                                  root_data_nodes)
+                                                  ectx.root_data_nodes)
     ctx: dict = dict(
-        table=tbl, T=T, cores=cores, seed=seed,
+        table=tbl, T=len(cores), cores=cores, seed=seed,
         queue_shared=spec.queue == "shared",
         child_first=spec.spawn == "child_first",
         vplan=policy.compile_victim_plan(spec, topo, cores),
@@ -312,8 +321,8 @@ def _prepare_ctx(topo: Topology,
         root_dist=root_dist,
         root_data_nodes=root_data_nodes,
         root_node0=int(root_data_nodes[0]),
-        runtime_data_node=runtime_data_node,
-        migration_rate=migration_rate,
+        runtime_data_node=ectx.runtime_data_node,
+        migration_rate=ectx.migration_rate,
         mem_intensity=workload.mem_intensity,
         hop_lambda=p.hop_lambda, hop_lambda_steal=p.hop_lambda_steal,
         lock_time=p.lock_time, deque_lock_time=p.deque_lock_time,
@@ -345,6 +354,40 @@ def _finish_result(ctx: dict, out: dict, serial: float,
     )
 
 
+def run_context(ectx: ExecContext,
+                workload: Workload,
+                scheduler: "str | SchedulerSpec",
+                seed: int = 0,
+                serial_reference: float | None = None) -> SimResult:
+    """Run ``workload`` under a compiled :class:`ExecContext`.
+
+    This is the engine entry point everything funnels through:
+    :func:`simulate` wraps its raw arguments into a context,
+    :meth:`.machine.Machine.run` passes cached ones, and
+    :func:`.sweep.run_sweep` batches many.
+
+    ``serial_reference`` overrides the speedup denominator; the default
+    is :func:`serial_time` on the context's master core with the
+    context's data placement. Pass one common value when comparing
+    variants like the paper does.
+    """
+    spec = policy.get_spec(scheduler)
+    ctx = _prepare_ctx(ectx, workload, spec, seed)
+    engine = _select_engine()
+    if engine == "c":
+        out = _csim.run(ctx)
+    else:
+        out = _engine_py.run(ctx)
+
+    # serial reference: one thread on the master core, same data placement.
+    if serial_reference is not None:
+        serial = serial_reference
+    else:
+        serial = serial_time(ectx.topo, workload, ectx.thread_cores[0],
+                             ctx["root_data_nodes"], ectx.params)
+    return _finish_result(ctx, out, serial, engine)
+
+
 def simulate(topo: Topology,
              thread_cores: Sequence[int],
              workload: Workload,
@@ -356,6 +399,12 @@ def simulate(topo: Topology,
              migration_rate: float = 0.0,
              serial_reference: float | None = None) -> SimResult:
     """Run ``workload`` on ``len(thread_cores)`` threads; return metrics.
+
+    Legacy positional form — a thin shim that wraps the raw arguments
+    into an explicit :class:`ExecContext` and delegates to
+    :func:`run_context`. New code should prefer the
+    :class:`~.machine.Machine` facade, which compiles and caches
+    declarative contexts (``binding="paper"``, ``placement="spill:2"``).
 
     Args:
       thread_cores: core id per thread; thread 0 is the master (its node
@@ -379,20 +428,7 @@ def simulate(topo: Topology,
         :func:`serial_time` on the master core with the same data nodes.
         Pass one common value when comparing variants like the paper does.
     """
-    spec = policy.get_spec(scheduler)
-    p = params or SimParams()
-    ctx = _prepare_ctx(topo, thread_cores, workload, spec, p, seed,
-                       root_data_nodes, runtime_data_node, migration_rate)
-    engine = _select_engine()
-    if engine == "c":
-        out = _csim.run(ctx)
-    else:
-        out = _engine_py.run(ctx)
-
-    # serial reference: one thread on the master core, same data placement.
-    if serial_reference is not None:
-        serial = serial_reference
-    else:
-        serial = serial_time(topo, workload, thread_cores[0],
-                             ctx["root_data_nodes"], p)
-    return _finish_result(ctx, out, serial, engine)
+    ectx = ExecContext.from_raw(topo, params or SimParams(), thread_cores,
+                                root_data_nodes, runtime_data_node,
+                                migration_rate)
+    return run_context(ectx, workload, scheduler, seed, serial_reference)

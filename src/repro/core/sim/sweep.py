@@ -15,6 +15,16 @@ Results are bit-identical to the per-call loop: each config gets its own
 ``RandomState(seed)`` stream and the engines are untouched — batching
 changes *when* work is dispatched, never *what* runs.
 
+Configs are validated at :meth:`SweepPlan.add` time — an unknown
+scheduler, a core outside the topology, or a bad spill node fails
+immediately with the offending grid cell named, instead of surfacing
+hundreds of configs later inside the C kernel.
+
+Every config lowers to an immutable :class:`~.context.ExecContext`
+before running; :meth:`SweepPlan.add_context` takes one directly (the
+:class:`~.machine.Machine` facade builds plans this way), while
+:meth:`SweepPlan.add` keeps the legacy ``simulate()`` argument tuple.
+
 Example::
 
     plan = SweepPlan()
@@ -23,6 +33,11 @@ Example::
             plan.add(topo, priority.allocate_threads(topo, T), wl, sched,
                      root_data_nodes=spill, serial_reference=serial)
     results = plan.run()        # list[SimResult], one per add() order
+
+or, declaratively (one call per paper figure)::
+
+    Machine(topo).grid(workloads=[wl], schedulers=("wf", "dfwsrpt"),
+                       threads=(2, 4, 8, 16), placements=("spill:2",))
 """
 
 from __future__ import annotations
@@ -30,7 +45,10 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional, Sequence
 
+import numpy as np
+
 from . import _csim, _engine_py, policy
+from .context import ExecContext
 from .runtime import (SimParams, SimResult, Workload, _finish_result,
                       _prepare_ctx, _select_engine, serial_time)
 
@@ -39,7 +57,12 @@ __all__ = ["SweepConfig", "SweepPlan", "run_sweep"]
 
 @dataclasses.dataclass(frozen=True, eq=False)
 class SweepConfig:
-    """One cell of a sweep grid — the ``simulate()`` argument tuple."""
+    """One cell of a sweep grid — the ``simulate()`` argument tuple.
+
+    ``context``, when set, is the pre-compiled :class:`ExecContext` the
+    cell runs under (the raw fields then mirror its lowered values);
+    otherwise one is derived from the raw fields at run time.
+    """
     topo: object
     thread_cores: tuple
     workload: Workload
@@ -50,6 +73,53 @@ class SweepConfig:
     runtime_data_node: Optional[int] = None
     migration_rate: float = 0.0
     serial_reference: Optional[float] = None
+    context: Optional[ExecContext] = None
+
+    def to_context(self) -> ExecContext:
+        """The :class:`ExecContext` this cell runs under."""
+        if self.context is not None:
+            return self.context
+        return ExecContext.from_raw(
+            self.topo, self.params or SimParams(), self.thread_cores,
+            self.root_data_nodes, self.runtime_data_node,
+            self.migration_rate)
+
+    def validate(self, cell: str = "sweep config") -> None:
+        """Raise ``ValueError`` naming ``cell`` on any bad field."""
+        def bad(msg):
+            raise ValueError(f"{cell}: {msg}")
+
+        try:
+            policy.get_spec(self.scheduler)
+        except ValueError as e:
+            bad(e)
+        topo = self.topo
+        cores = self.thread_cores
+        if not cores:
+            bad("empty thread binding")
+        outside = [c for c in cores if not 0 <= int(c) < topo.num_cores]
+        if outside:
+            bad(f"cores {outside} outside topology "
+                f"({topo.num_cores} cores)")
+        if len(set(cores)) != len(cores):
+            bad(f"duplicate cores in binding {cores}")
+        nodes = self.root_data_nodes
+        if nodes is not None:
+            if isinstance(nodes, (int, np.integer)):
+                nodes = (int(nodes),)
+            outside = [n for n in nodes if not 0 <= int(n) < topo.num_nodes]
+            if outside:
+                bad(f"root data nodes {outside} outside topology "
+                    f"({topo.num_nodes} nodes)")
+        rt = self.runtime_data_node
+        if rt is not None and not 0 <= int(rt) < topo.num_nodes:
+            bad(f"runtime_data_node {rt} outside topology "
+                f"({topo.num_nodes} nodes)")
+        if not 0.0 <= self.migration_rate <= 1.0:
+            bad(f"migration_rate {self.migration_rate} outside [0, 1]")
+        if self.params is not None and not isinstance(self.params,
+                                                      SimParams):
+            bad(f"params is {type(self.params).__name__}, not SimParams")
 
 
 class SweepPlan:
@@ -58,10 +128,46 @@ class SweepPlan:
     def __init__(self, configs: Sequence[SweepConfig] = ()):
         self.configs: list[SweepConfig] = list(configs)
 
+    def _cell_name(self, workload, scheduler, T) -> str:
+        sched = scheduler.name if hasattr(scheduler, "name") else scheduler
+        return (f"sweep cell #{len(self.configs)} "
+                f"({workload.name}/{sched}/T={T})")
+
     def add(self, topo, thread_cores, workload, scheduler,
             **kwargs) -> SweepConfig:
+        """Append one cell from ``simulate()``-style arguments.
+
+        Validates eagerly: a bad scheduler name, core id, or data node
+        raises here — naming this grid cell — not mid-batch in the
+        engine.
+        """
         cfg = SweepConfig(topo, tuple(int(c) for c in thread_cores),
                           workload, scheduler, **kwargs)
+        cfg.validate(self._cell_name(workload, scheduler,
+                                     len(cfg.thread_cores)))
+        self.configs.append(cfg)
+        return cfg
+
+    def add_context(self, context: ExecContext, workload, scheduler, *,
+                    seed: int = 0,
+                    serial_reference: Optional[float] = None) -> SweepConfig:
+        """Append one cell running under a compiled :class:`ExecContext`.
+
+        Only the scheduler needs checking here — the context itself was
+        validated when :meth:`ExecContext.compile` lowered it.
+        """
+        try:
+            policy.get_spec(scheduler)
+        except ValueError as e:
+            cell = self._cell_name(workload, scheduler, context.threads)
+            raise ValueError(f"{cell}: {e}") from None
+        cfg = SweepConfig(context.topo, context.thread_cores, workload,
+                          scheduler, params=context.params, seed=seed,
+                          root_data_nodes=context.root_data_nodes,
+                          runtime_data_node=context.runtime_data_node,
+                          migration_rate=context.migration_rate,
+                          serial_reference=serial_reference,
+                          context=context)
         self.configs.append(cfg)
         return cfg
 
@@ -84,17 +190,15 @@ def run_sweep(plan: "SweepPlan | Sequence[SweepConfig]") -> list[SimResult]:
     ctxs, serials = [], []
     for cfg in configs:
         spec = policy.get_spec(cfg.scheduler)
-        p = cfg.params or SimParams()
-        ctx = _prepare_ctx(cfg.topo, cfg.thread_cores, cfg.workload, spec,
-                           p, cfg.seed, cfg.root_data_nodes,
-                           cfg.runtime_data_node, cfg.migration_rate)
+        ectx = cfg.to_context()
+        ctx = _prepare_ctx(ectx, cfg.workload, spec, cfg.seed)
         ctxs.append(ctx)
         if cfg.serial_reference is not None:
             serials.append(cfg.serial_reference)
         else:
-            serials.append(serial_time(cfg.topo, cfg.workload,
-                                       cfg.thread_cores[0],
-                                       ctx["root_data_nodes"], p))
+            serials.append(serial_time(ectx.topo, cfg.workload,
+                                       ectx.thread_cores[0],
+                                       ctx["root_data_nodes"], ectx.params))
     if engine == "c":
         outs = _csim.run_batch(ctxs)
     else:

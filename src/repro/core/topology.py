@@ -20,11 +20,27 @@ import numpy as np
 
 __all__ = [
     "Topology",
+    "lazy_cache",
     "sunfire_x4600",
     "tpu_pod_2d",
     "multi_pod",
     "uma",
 ]
+
+
+def lazy_cache(topo: "Topology", attr: str) -> dict:
+    """A named memo dict living on a (frozen) topology.
+
+    Compiled artifacts keyed by immutable topology state — distance
+    matrices, priority results, binding/placement lowerings, victim
+    plans — cache here so every consumer sharing the topology shares
+    them. ``object.__setattr__`` because the dataclass is frozen.
+    """
+    cache = topo.__dict__.get(attr)
+    if cache is None:
+        cache = {}
+        object.__setattr__(topo, attr, cache)
+    return cache
 
 
 @dataclasses.dataclass(frozen=True)

@@ -1,0 +1,484 @@
+"""Tests for the declarative execution-context layer.
+
+The tentpole contract: a :class:`BindingSpec`/:class:`PlacementSpec`
+lowers bit-exactly to the imperative ``allocate_threads`` /
+``first_touch_spill`` call chains it replaces, ``Machine.run`` equals
+the positional ``simulate()`` shim, ``Machine.grid`` equals the
+hand-written per-cell loop, and the registries validate like
+``SCHEDULERS`` does.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import placement, priority, topology
+from repro.core.sim import (BINDINGS, PLACEMENTS, BindingSpec, ExecContext,
+                            Grid, Machine, PlacementSpec, SimParams,
+                            SweepPlan, bots, context, get_binding,
+                            get_placement, register_binding,
+                            register_placement, serial_time, simulate)
+from repro.core.sim import _csim
+
+SUNFIRE = topology.sunfire_x4600()
+TPU = topology.tpu_pod_2d(2, 4)
+HAVE_C = _csim.load() is not None
+ENGINES = ["py", "c"] if HAVE_C else ["py"]
+
+
+@pytest.fixture(params=ENGINES)
+def engine(request, monkeypatch):
+    monkeypatch.setenv("REPRO_SIM_ENGINE", request.param)
+    return request.param
+
+
+# ----------------------------------------------------------------------
+# BindingSpec ≡ allocate_threads (both topologies)
+# ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("topo", [SUNFIRE, TPU], ids=["sunfire", "tpu2x4"])
+def test_paper_binding_equals_allocate_threads(topo):
+    spec = BINDINGS["paper"]
+    for T in (1, 2, 5, topo.num_cores):
+        for seed in (0, 3):
+            assert spec.lower(topo, T, seed=seed) == \
+                tuple(priority.allocate_threads(topo, T, seed=seed)), (T, seed)
+
+
+def test_linear_scatter_node_fill_lowerings():
+    assert BINDINGS["linear"].lower(SUNFIRE, 6) == tuple(range(6))
+    # sunfire cores are node-contiguous: node_fill == linear there
+    assert BINDINGS["node_fill"].lower(SUNFIRE, 7) == tuple(range(7))
+    # scatter: one core per node per round, node ids ascending
+    sc = BINDINGS["scatter"].lower(SUNFIRE, 10)
+    assert sc[:8] == (0, 2, 4, 6, 8, 10, 12, 14)   # first core per node
+    assert sc[8:] == (1, 3)                        # second round
+    nodes = [int(SUNFIRE.core_node[c]) for c in sc[:8]]
+    assert nodes == list(range(8))
+
+
+def test_binding_lowering_cached_on_topology():
+    spec = BINDINGS["paper"]
+    assert spec.lower(SUNFIRE, 8) is spec.lower(SUNFIRE, 8)
+    assert spec.lower(SUNFIRE, 8, seed=1) is not spec.lower(SUNFIRE, 8)
+    # linear ignores the seed in its cache key
+    assert BINDINGS["linear"].lower(SUNFIRE, 8, seed=1) is \
+        BINDINGS["linear"].lower(SUNFIRE, 8, seed=2)
+
+
+def test_explicit_binding_forms():
+    assert get_binding("cores:3,1,5").lower(SUNFIRE) == (3, 1, 5)
+    assert get_binding([4, 2]).lower(SUNFIRE) == (4, 2)
+    assert get_binding(range(4)).lower(SUNFIRE, 4) == (0, 1, 2, 3)
+    with pytest.raises(ValueError, match="pins 2 cores"):
+        get_binding((0, 1)).lower(SUNFIRE, 3)
+    with pytest.raises(ValueError, match="outside topology"):
+        get_binding([0, 99]).lower(SUNFIRE)
+    with pytest.raises(ValueError, match="duplicate"):
+        get_binding([1, 1]).lower(SUNFIRE)
+
+
+def test_binding_validation():
+    with pytest.raises(ValueError, match="kind"):
+        BindingSpec("x", kind="bogus")
+    with pytest.raises(ValueError, match="non-empty"):
+        BindingSpec("x", kind="explicit")
+    with pytest.raises(ValueError, match="takes no"):
+        BindingSpec("x", kind="linear", cores=(0, 1))
+    with pytest.raises(ValueError, match="threads=99 out of range"):
+        BINDINGS["linear"].lower(SUNFIRE, 99)
+    with pytest.raises(ValueError, match="needs threads"):
+        BINDINGS["paper"].lower(SUNFIRE)
+    with pytest.raises(ValueError, match="unknown binding"):
+        get_binding("bogus")
+    with pytest.raises(ValueError, match="malformed"):
+        get_binding("cores:1,x")
+    with pytest.raises(TypeError):
+        get_binding(1.5)
+
+
+# ----------------------------------------------------------------------
+# PlacementSpec ≡ first_touch_spill (both topologies)
+# ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("topo", [SUNFIRE, TPU], ids=["sunfire", "tpu2x4"])
+def test_spill_placement_equals_first_touch_spill(topo):
+    pr = priority.priorities(topo)
+    for T in (2, topo.num_cores):
+        master = priority.allocate_threads(topo, T)[0]
+        mn = int(topo.core_node[master])
+        for k in (1, 2, 3):
+            # paper spill: from the master's node, priority tie-breaks
+            spec = get_placement(f"spill:{k}")
+            assert spec.lower(topo, master) == \
+                tuple(placement.first_touch_spill(topo, mn, k, pr)), (T, k)
+            # baseline spill: pinned start node, Linux node-id walk
+            spec0 = get_placement(f"spill:{k}@0")
+            assert spec0.lower(topo, master) == \
+                tuple(placement.first_touch_spill(topo, 0, k)), (T, k)
+
+
+def test_placement_lowerings():
+    assert PLACEMENTS["first_touch"].lower(SUNFIRE, 0) is None
+    assert PLACEMENTS["interleave"].lower(SUNFIRE, 5) == tuple(range(8))
+    assert get_placement("node:3").lower(SUNFIRE, 0) == (3,)
+    assert get_placement("nodes:1,3").lower(SUNFIRE, 0) == (1, 3)
+    assert get_placement(4).lower(SUNFIRE, 0) == (4,)
+    assert get_placement([2, 6]).lower(SUNFIRE, 0) == (2, 6)
+    assert get_placement(None) is PLACEMENTS["first_touch"]
+    # cached per (spec, resolved start node)
+    spec = get_placement("spill:2")
+    assert spec.lower(SUNFIRE, 6) is get_placement("spill:2").lower(SUNFIRE, 7)
+
+
+def test_placement_validation():
+    with pytest.raises(ValueError, match="kind"):
+        PlacementSpec("x", kind="bogus")
+    with pytest.raises(ValueError, match="ties"):
+        PlacementSpec("x", kind="spill", ties="bogus")
+    with pytest.raises(ValueError, match=">=1 node|≥1 node"):
+        PlacementSpec("x", kind="spill", spill_nodes=0)
+    with pytest.raises(ValueError, match="non-empty"):
+        PlacementSpec("x", kind="explicit")
+    with pytest.raises(ValueError, match="takes no"):
+        PlacementSpec("x", kind="interleave", nodes=(1,))
+    with pytest.raises(ValueError, match="spill over 99"):
+        get_placement("spill:99").lower(SUNFIRE, 0)
+    with pytest.raises(ValueError, match="start node 88"):
+        get_placement("spill:1@88").lower(SUNFIRE, 0)
+    with pytest.raises(ValueError, match="nodes \\[42\\] outside"):
+        get_placement("node:42").lower(SUNFIRE, 0)
+    with pytest.raises(ValueError, match="unknown placement"):
+        get_placement("bogus")
+    with pytest.raises(ValueError, match="malformed"):
+        get_placement("spill:x")
+    with pytest.raises(ValueError, match="malformed"):
+        get_placement("spill:2@y")
+    with pytest.raises(TypeError):
+        get_placement(2.5)
+
+
+# ----------------------------------------------------------------------
+# registries
+# ----------------------------------------------------------------------
+
+def test_registry_roundtrip(monkeypatch):
+    b = BindingSpec("tmp_binding", kind="scatter")
+    monkeypatch.setitem(BINDINGS, "tmp_binding", b)
+    assert get_binding("tmp_binding") is b
+    p = PlacementSpec("tmp_place", kind="spill", spill_nodes=3)
+    monkeypatch.setitem(PLACEMENTS, "tmp_place", p)
+    assert get_placement("tmp_place") is p
+
+
+def test_register_duplicate_guards():
+    with pytest.raises(ValueError, match="already registered"):
+        register_binding(BindingSpec("paper", kind="paper"))
+    with pytest.raises(ValueError, match="already registered"):
+        register_placement(PlacementSpec("first_touch"))
+    # replace=True round-trips the stock entries unchanged
+    assert register_binding(BINDINGS["paper"], replace=True) \
+        is BINDINGS["paper"]
+    assert register_placement(PLACEMENTS["interleave"], replace=True) \
+        is PLACEMENTS["interleave"]
+
+
+def test_stock_registry_contents():
+    assert set(BINDINGS) >= {"paper", "linear", "scatter", "node_fill"}
+    assert set(PLACEMENTS) >= {"first_touch", "interleave"}
+    for spec in BINDINGS.values():
+        assert spec.kind in context.BINDING_KINDS
+
+
+# ----------------------------------------------------------------------
+# ExecContext + Machine
+# ----------------------------------------------------------------------
+
+def test_exec_context_compile_fields():
+    m = Machine(SUNFIRE)
+    ctx = m.context(16, binding="paper", placement="spill:2",
+                    runtime_data="master")
+    assert ctx.threads == 16
+    assert ctx.master_core == ctx.thread_cores[0]
+    assert ctx.master_node == int(SUNFIRE.core_node[ctx.master_core])
+    assert ctx.runtime_data_node == ctx.master_node
+    assert ctx.label() == "paper/spill:2"
+    assert len(ctx.root_data_nodes) == 2
+
+
+def test_exec_context_validation():
+    m = Machine(SUNFIRE)
+    with pytest.raises(ValueError, match="runtime_data"):
+        m.context(4, runtime_data="bogus")
+    with pytest.raises(ValueError, match="runtime_data node 99"):
+        m.context(4, runtime_data=99)
+    with pytest.raises(ValueError, match="migration_rate"):
+        m.context(4, migration_rate=1.5)
+    with pytest.raises(ValueError, match="out of range"):
+        m.context(99)
+
+
+def test_machine_context_cached():
+    m = Machine(SUNFIRE)
+    c1 = m.context(8, binding="paper", placement="spill:2")
+    c2 = m.context(8, binding="paper", placement="spill:2")
+    assert c1 is c2
+    assert m.context(8, binding="linear") is not c1
+    # list forms normalize onto the same cache slot as their tuple twin
+    assert m.context(binding=[0, 1, 2]) is m.context(binding=(0, 1, 2))
+
+
+def test_machine_run_equals_simulate(engine):
+    wl = bots.fft(n=1 << 10, cutoff=8)
+    m = Machine(SUNFIRE)
+    spill0 = placement.first_touch_spill(SUNFIRE, 0, 2)
+    serial = serial_time(SUNFIRE, wl, 0, spill0)
+    want = simulate(SUNFIRE, list(range(16)), wl, "wf", seed=0,
+                    root_data_nodes=spill0, runtime_data_node=0,
+                    migration_rate=0.15, serial_reference=serial)
+    got = m.run(wl, "wf", seed=0, serial_reference=serial, threads=16,
+                binding="linear", placement="spill:2@0", runtime_data=0,
+                migration_rate=0.15)
+    assert got == want
+    alloc = priority.allocate_threads(SUNFIRE, 16)
+    pr = priority.priorities(SUNFIRE)
+    spill = placement.first_touch_spill(
+        SUNFIRE, int(SUNFIRE.core_node[alloc[0]]), 2, pr)
+    want = simulate(SUNFIRE, alloc, wl, "dfwsrpt", seed=4,
+                    root_data_nodes=spill)
+    got = m.run(wl, "dfwsrpt", seed=4, threads=16, binding="paper",
+                placement="spill:2")
+    assert got == want
+
+
+def test_machine_run_rejects_context_plus_kwargs():
+    m = Machine(SUNFIRE)
+    ctx = m.context(4)
+    with pytest.raises(ValueError, match="not both"):
+        m.run(bots.fft(n=1 << 8, cutoff=8), "wf", context=ctx, threads=4)
+
+
+def test_machine_serial_time_matches_legacy():
+    wl = bots.fft(n=1 << 10, cutoff=8)
+    m = Machine(SUNFIRE)
+    spill0 = placement.first_touch_spill(SUNFIRE, 0, 2)
+    assert m.serial_time(wl, placement="spill:2@0") == \
+        serial_time(SUNFIRE, wl, 0, spill0)
+    assert m.serial_time(wl) == serial_time(SUNFIRE, wl, 0, None)
+
+
+def test_grid_equals_hand_loop(engine):
+    """Acceptance: a mixed base/numa grid through Machine.grid equals
+    the imperative allocate_threads/first_touch_spill loop, cell for
+    cell."""
+    wl = bots.fft(n=1 << 10, cutoff=8)
+    m = Machine(SUNFIRE)
+    pr = priority.priorities(SUNFIRE)
+    spill0 = placement.first_touch_spill(SUNFIRE, 0, 2)
+    serial = serial_time(SUNFIRE, wl, 0, spill0)
+    g = m.grid(workloads=[wl], schedulers=("bf", "wf", "dfwsrpt"),
+               threads=(2, 8), seeds=(0, 1),
+               contexts={"base": dict(binding="linear", placement="spill:2@0",
+                                      runtime_data=0, migration_rate=0.15),
+                         "numa": dict(binding="paper", placement="spill:2")},
+               serial_reference={"fft": serial})
+    res = g.run()
+    assert len(res) == 2 * 2 * 3 * 2
+    for k, r in res.items():
+        if k.context == "base":
+            want = simulate(SUNFIRE, list(range(k.threads)), wl, k.scheduler,
+                            seed=k.seed, root_data_nodes=spill0,
+                            runtime_data_node=0, migration_rate=0.15,
+                            serial_reference=serial)
+        else:
+            alloc = priority.allocate_threads(SUNFIRE, k.threads)
+            spill = placement.first_touch_spill(
+                SUNFIRE, int(SUNFIRE.core_node[alloc[0]]), 2, pr)
+            want = simulate(SUNFIRE, alloc, wl, k.scheduler, seed=k.seed,
+                            root_data_nodes=spill, serial_reference=serial)
+        assert r == want, k
+
+
+def test_grid_default_cross_and_concat(engine):
+    wl1 = bots.fft(n=1 << 8, cutoff=8)
+    wl2 = bots.sparselu(n=6)
+    m = Machine(SUNFIRE)
+    g1 = m.grid(workloads=wl1, schedulers="wf", threads=4,
+                bindings=("paper", "linear"), placements=("first_touch",))
+    assert [k.context for k in g1.keys] == ["paper/first_touch",
+                                            "linear/first_touch"]
+    g2 = m.grid(workloads=[wl2], schedulers=("wf",), threads=4)
+    fused = Grid.concat([g1, g2])
+    assert len(fused) == 3
+    res = fused.run()
+    assert list(res) == g1.keys + g2.keys
+    for k, r in res.items():
+        wl = wl1 if k.workload == "fft" else wl2
+        cores = priority.allocate_threads(SUNFIRE, 4) \
+            if k.context.startswith("paper") else list(range(4))
+        assert r == simulate(SUNFIRE, cores, wl, "wf", seed=0), k
+
+
+def test_grid_input_validation():
+    m = Machine(SUNFIRE)
+    wl = bots.fft(n=1 << 8, cutoff=8)
+    with pytest.raises(ValueError, match="duplicate workload names"):
+        m.grid(workloads=[wl, bots.fft(n=1 << 8, cutoff=8)],
+               schedulers=("wf",), threads=2)
+    with pytest.raises(ValueError, match="unknown scheduler"):
+        m.grid(workloads=[wl], schedulers=("nope",), threads=2)
+
+
+def test_grid_context_variant_threads_override(engine):
+    """A contexts= variant may pin its own thread count; a pinned
+    variant emits once even when the grid sweeps several counts."""
+    wl = bots.fft(n=1 << 8, cutoff=8)
+    m = Machine(SUNFIRE)
+    g = m.grid(workloads=[wl], schedulers=("wf",), threads=(4, 8),
+               contexts={"narrow": dict(binding="linear", threads=2),
+                         "wide": dict(binding="linear")})
+    res = g.run()
+    assert [(k.context, k.threads) for k in res] == \
+        [("narrow", 2), ("wide", 4), ("wide", 8)]
+    for k, r in res.items():
+        assert r == simulate(SUNFIRE, list(range(k.threads)), wl, "wf",
+                             seed=0), k
+
+
+def test_grid_contexts_exclusive_with_bindings_placements():
+    m = Machine(SUNFIRE)
+    wl = bots.fft(n=1 << 8, cutoff=8)
+    with pytest.raises(ValueError, match="not both"):
+        m.grid(workloads=[wl], schedulers=("wf",), threads=2,
+               placements=("spill:2",),
+               contexts={"v": dict(binding="paper")})
+    with pytest.raises(ValueError, match="not both"):
+        m.grid(workloads=[wl], schedulers=("wf",), threads=2,
+               bindings=("linear",), contexts={"v": {}})
+
+
+def test_grid_rejects_duplicate_cells():
+    """Colliding GridKeys would be silently collapsed by the result
+    dict — run() must refuse instead."""
+    m = Machine(SUNFIRE)
+    wl = bots.fft(n=1 << 8, cutoff=8)
+    g = m.grid(workloads=[wl], schedulers=("wf",), threads=2,
+               seeds=(0, 0))
+    with pytest.raises(ValueError, match="duplicate cells"):
+        g.run()
+    g1 = m.grid(workloads=[wl], schedulers=("wf",), threads=2)
+    with pytest.raises(ValueError, match="duplicate cells"):
+        Grid.concat([g1, g1]).run()
+
+
+# ----------------------------------------------------------------------
+# SweepPlan add()-time validation (names the offending cell)
+# ----------------------------------------------------------------------
+
+def test_sweep_add_validates_eagerly():
+    wl = bots.fft(n=1 << 8, cutoff=8)
+    plan = SweepPlan()
+    plan.add(SUNFIRE, [0, 1], wl, "wf")     # fine
+    with pytest.raises(ValueError, match=r"cell #1 \(fft/nope/T=2\).*"
+                                         "unknown scheduler"):
+        plan.add(SUNFIRE, [0, 1], wl, "nope")
+    with pytest.raises(ValueError, match=r"cell #1.*cores \[99\]"):
+        plan.add(SUNFIRE, [0, 99], wl, "wf")
+    with pytest.raises(ValueError, match="duplicate cores"):
+        plan.add(SUNFIRE, [1, 1], wl, "wf")
+    with pytest.raises(ValueError, match="root data nodes \\[9\\]"):
+        plan.add(SUNFIRE, [0, 1], wl, "wf", root_data_nodes=[0, 9])
+    with pytest.raises(ValueError, match="runtime_data_node 12"):
+        plan.add(SUNFIRE, [0, 1], wl, "wf", runtime_data_node=12)
+    with pytest.raises(ValueError, match="migration_rate"):
+        plan.add(SUNFIRE, [0, 1], wl, "wf", migration_rate=2.0)
+    with pytest.raises(ValueError, match="not SimParams"):
+        plan.add(SUNFIRE, [0, 1], wl, "wf", params={"hop_lambda": 1})
+    with pytest.raises(ValueError, match="empty thread binding"):
+        plan.add(SUNFIRE, [], wl, "wf")
+    assert len(plan) == 1                   # failed adds appended nothing
+
+
+def test_sweep_add_context_runs(engine):
+    wl = bots.fft(n=1 << 8, cutoff=8)
+    m = Machine(SUNFIRE)
+    ctx = m.context(4, binding="paper", placement="spill:2")
+    plan = SweepPlan()
+    plan.add_context(ctx, wl, "dfwspt", seed=2)
+    [r] = plan.run()
+    assert r == m.run(wl, "dfwspt", seed=2, context=ctx)
+
+
+def test_sim_params_frozen():
+    p = SimParams()
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        p.hop_lambda = 9.9
+    assert hash(p) == hash(SimParams())     # usable as a cache key
+
+
+# ----------------------------------------------------------------------
+# priority memoization satellite
+# ----------------------------------------------------------------------
+
+def test_priorities_memoized():
+    topo = topology.sunfire_x4600()         # fresh topo: fresh caches
+    p1 = priority.priorities(topo)
+    p2 = priority.priorities(topo)
+    assert p1 is p2
+    assert not p1.total.flags.writeable     # shared arrays are read-only
+    p3 = priority.priorities(topo, available=list(range(8)))
+    assert p3 is not p1
+    assert p3 is priority.priorities(topo, available=range(8))
+
+
+def test_allocate_threads_memoized():
+    topo = topology.sunfire_x4600()
+    a1 = priority.allocate_threads(topo, 8, seed=1)
+    a2 = priority.allocate_threads(topo, 8, seed=1)
+    assert a1 == a2
+    assert a1 is not a2                     # callers get a fresh list
+    a2.append(-1)                           # ...so mutation is harmless
+    assert priority.allocate_threads(topo, 8, seed=1) == a1
+    assert priority.allocate_threads(topo, 8, seed=2) != a1
+    # weights participate in the key
+    w = priority.default_weights(topo.max_distance()) * 2
+    aw = priority.allocate_threads(topo, 8, weights=w, seed=1)
+    assert aw == priority.allocate_threads(topo, 8, weights=w, seed=1)
+
+
+# ----------------------------------------------------------------------
+# sparselu paper tier satellite
+# ----------------------------------------------------------------------
+
+def test_sparselu_flat_matches_compiled_tree():
+    from repro.core.sim.table import compile_tree
+    tf = bots.sparselu_flat(n=12).table
+    tt = compile_tree(bots.sparselu(n=12).root)
+    for field in ("work_pre", "work_post", "f_root", "f_parent",
+                  "first_child", "num_children", "first_post", "num_post",
+                  "parent", "cls"):
+        assert np.array_equal(getattr(tf, field), getattr(tt, field)), field
+
+
+def test_sparselu_flat_simulates_identically(engine):
+    r1 = simulate(SUNFIRE, list(range(8)), bots.sparselu_flat(n=10),
+                  "dfwsrpt", seed=7)
+    r2 = simulate(SUNFIRE, list(range(8)), bots.sparselu(n=10),
+                  "dfwsrpt", seed=7)
+    assert r1 == r2
+
+
+def test_sparselu_flat_validation():
+    with pytest.raises(ValueError):
+        bots.sparselu_flat(n=1)
+
+
+@pytest.mark.slow
+def test_sparselu_paper_scale():
+    wl = bots.make("sparselu", "paper")
+    assert wl.table.n >= bots.PAPER_MIN_TASKS
+    m = Machine(SUNFIRE)
+    r = m.run(wl, "dfwsrpt", seed=0, threads=16, binding="paper",
+              placement="spill:2")
+    assert r.makespan > 0 and r.steals > 0

@@ -223,21 +223,22 @@ def test_sweep_serial_reference_defaults(engine):
 
 @pytest.mark.slow
 def test_figs_grid_sweep_parity():
-    """Acceptance: the full Figs 5–10 grid through the batched planner
-    equals the per-call simulate() loop, speedup for speedup."""
+    """Acceptance: the full Figs 5–10 grid through ``Machine.grid()``
+    equals the hand-written per-call simulate() loop (the pre-facade
+    driver, verbatim), speedup for speedup."""
     import benchmarks.bots_repro as br
+    from repro.core.sim import serial_time
+    pr = priority.priorities(br.TOPO)
     for name in ("fft", "nqueens"):
-        plan, keys = br.plan_benchmark(name)
-        swept = {k: r.speedup for k, r in zip(keys, plan.run())}
+        swept = br.run_benchmark(name)
         wl = br._workload(name)
         spill0 = placement.first_touch_spill(br.TOPO, 0, br.SPILL[name])
-        from repro.core.sim import serial_time
         serial = serial_time(br.TOPO, wl, 0, spill0, br.PARAMS)
         for T in br.THREADS:
             alloc = priority.allocate_threads(br.TOPO, T)
             mn = int(br.TOPO.core_node[alloc[0]])
             spill_n = placement.first_touch_spill(br.TOPO, mn,
-                                                  br.SPILL[name], br.PR)
+                                                  br.SPILL[name], pr)
             for sched in ("bf", "cilk", "wf"):
                 r = simulate(br.TOPO, list(range(T)), wl, sched,
                              params=br.PARAMS, seed=0,

@@ -1,24 +1,29 @@
 """Simulator tests: determinism, invariants, and the paper's headline
 qualitative claims (bf collapse on data-intensive benchmarks, NUMA-aware
-allocation gains, scheduler ordering)."""
+allocation gains, scheduler ordering).
 
-import numpy as np
+The paper's two execution variants are declarative contexts on the
+:class:`Machine` facade: ``BASE`` is baseline Nanos (threads in OS
+enumeration order and unbound, runtime + root data on node 0), ``NUMA``
+is the paper's model (priority binding, local runtime data, spill from
+the master's node). The determinism/invariant tests stay on the legacy
+positional ``simulate()`` shim so both entry points keep coverage.
+"""
+
 import pytest
 from _hypothesis_compat import given, settings, strategies as st
 
-from repro.core import placement, priority, topology
-from repro.core.sim import (SimParams, bots, serial_time, simulate,
-                            SCHEDULERS, TaskSpec, Workload)
+from repro.core import topology
+from repro.core.sim import Machine, bots, simulate, SCHEDULERS, TaskSpec
 
 TOPO = topology.sunfire_x4600()
-PR = priority.priorities(TOPO)
+M = Machine(TOPO)
 
-
-def _numa_setup(T):
-    alloc = priority.allocate_threads(TOPO, T)
-    mn = int(TOPO.core_node[alloc[0]])
-    spill = placement.first_touch_spill(TOPO, mn, 2, PR)
-    return alloc, spill
+# the paper's two execution variants (spill size 2 — the data-intensive
+# benchmarks' regime)
+BASE = dict(threads=16, binding="linear", placement="spill:2@0",
+            runtime_data=0, migration_rate=0.15)
+NUMA = dict(threads=16, binding="paper", placement="spill:2")
 
 
 def test_deterministic():
@@ -46,17 +51,13 @@ def test_single_thread_close_to_serial():
 def test_bf_collapses_on_fft():
     """Paper Fig 7: breadth-first degrades for FFT beyond ~6 cores."""
     wl = bots.fft(n=1 << 15, cutoff=4)
-    spill = placement.first_touch_spill(TOPO, 0, 2)
-    serial = serial_time(TOPO, wl, 0, spill)
+    serial = M.serial_time(wl, placement="spill:2@0")
     sp = {}
     for T in (6, 16):
-        r = simulate(TOPO, list(range(T)), wl, "bf", seed=0,
-                     root_data_nodes=spill, runtime_data_node=0,
-                     migration_rate=0.15, serial_reference=serial)
+        r = M.run(wl, "bf", seed=0, serial_reference=serial,
+                  **{**BASE, "threads": T})
         sp[T] = r.speedup
-    ws = simulate(TOPO, list(range(16)), wl, "wf", seed=0,
-                  root_data_nodes=spill, runtime_data_node=0,
-                  migration_rate=0.15, serial_reference=serial)
+    ws = M.run(wl, "wf", seed=0, serial_reference=serial, **BASE)
     assert sp[16] < sp[6] * 1.35              # no scaling 6 → 16
     assert ws.speedup > 2.5 * sp[16]          # work stealing far ahead
 
@@ -66,28 +67,20 @@ def test_numa_allocation_helps_data_intensive():
     for name in ("fft", "strassen"):
         wl = bots.make(name, "medium") if name != "fft" \
             else bots.fft(n=1 << 14, cutoff=4)
-        spill0 = placement.first_touch_spill(TOPO, 0, 2)
-        serial = serial_time(TOPO, wl, 0, spill0)
-        base = simulate(TOPO, list(range(16)), wl, "wf", seed=0,
-                        root_data_nodes=spill0, runtime_data_node=0,
-                        migration_rate=0.15, serial_reference=serial)
-        alloc, spill = _numa_setup(16)
-        numa = simulate(TOPO, alloc, wl, "wf", seed=0,
-                        root_data_nodes=spill, serial_reference=serial)
+        serial = M.serial_time(wl, placement="spill:2@0")
+        base = M.run(wl, "wf", seed=0, serial_reference=serial, **BASE)
+        numa = M.run(wl, "wf", seed=0, serial_reference=serial, **NUMA)
         assert numa.speedup > base.speedup * 1.02, name
 
 
 def test_numa_gain_small_for_compute_bound():
     """Paper: NQueens gains only ~1.35% (compute-bound)."""
     wl = bots.nqueens(n=11)
-    spill0 = placement.first_touch_spill(TOPO, 0, 1)
-    serial = serial_time(TOPO, wl, 0, spill0)
-    base = simulate(TOPO, list(range(16)), wl, "wf", seed=0,
-                    root_data_nodes=spill0, runtime_data_node=0,
-                    migration_rate=0.15, serial_reference=serial)
-    alloc, spill = _numa_setup(16)
-    numa = simulate(TOPO, alloc, wl, "wf", seed=0,
-                    root_data_nodes=spill[:1], serial_reference=serial)
+    serial = M.serial_time(wl, placement="spill:1@0")
+    base = M.run(wl, "wf", seed=0, serial_reference=serial,
+                 **{**BASE, "placement": "spill:1@0"})
+    numa = M.run(wl, "wf", seed=0, serial_reference=serial,
+                 **{**NUMA, "placement": "spill:1"})
     gain = numa.speedup / base.speedup - 1
     assert -0.05 < gain < 0.15
 
@@ -95,10 +88,8 @@ def test_numa_gain_small_for_compute_bound():
 def test_dfwspt_stealing_is_local():
     """NUMA-aware stealing keeps probes closer than random stealing."""
     wl = bots.strassen(depth=4)
-    alloc, spill = _numa_setup(16)
-    r_wf = simulate(TOPO, alloc, wl, "wf", seed=0, root_data_nodes=spill)
-    r_pt = simulate(TOPO, alloc, wl, "dfwspt", seed=0,
-                    root_data_nodes=spill)
+    r_wf = M.run(wl, "wf", seed=0, **NUMA)
+    r_pt = M.run(wl, "dfwspt", seed=0, **NUMA)
     assert r_pt.steals > 0 and r_wf.steals > 0
     assert r_pt.makespan <= r_wf.makespan * 1.1
 
@@ -128,23 +119,16 @@ def test_taskspec_counts(depth, branch):
 
 def test_paper_fft_scheduler_ordering():
     """Integration: the paper's FFT@16 ordering
-    bf ≪ cilk ≤ wf < {wf,cilk}+NUMA ≤ DFWSPT/DFWSRPT."""
+    bf ≪ cilk ≤ wf < {wf,cilk}+NUMA ≤ DFWSPT/DFWSRPT — the whole
+    comparison as one declarative grid."""
     wl = bots.fft(n=1 << 15, cutoff=4)
-    spill0 = placement.first_touch_spill(TOPO, 0, 2)
-    serial = serial_time(TOPO, wl, 0, spill0)
-
-    def base(s):
-        return simulate(TOPO, list(range(16)), wl, s, seed=0,
-                        root_data_nodes=spill0, runtime_data_node=0,
-                        migration_rate=0.15, serial_reference=serial).speedup
-
-    alloc, spill = _numa_setup(16)
-
-    def numa(s):
-        return simulate(TOPO, alloc, wl, s, seed=0,
-                        root_data_nodes=spill,
-                        serial_reference=serial).speedup
-
-    assert base("bf") < 0.5 * base("wf")
-    assert numa("wf") > base("wf")
-    assert max(numa("dfwspt"), numa("dfwsrpt")) >= numa("wf") * 0.98
+    serial = M.serial_time(wl, placement="spill:2@0")
+    g = M.grid(workloads=[wl],
+               schedulers=("bf", "wf", "dfwspt", "dfwsrpt"),
+               contexts={"base": BASE, "numa": NUMA},
+               serial_reference=serial)
+    sp = {(k.context, k.scheduler): r.speedup for k, r in g.run().items()}
+    assert sp[("base", "bf")] < 0.5 * sp[("base", "wf")]
+    assert sp[("numa", "wf")] > sp[("base", "wf")]
+    assert max(sp[("numa", "dfwspt")], sp[("numa", "dfwsrpt")]) >= \
+        sp[("numa", "wf")] * 0.98

@@ -120,6 +120,8 @@ TABLE_FIELDS = ("work_pre", "work_post", "f_root", "f_parent",
      lambda: bots.sort(n=1 << 10, cutoff=16)),
     (lambda: bots.strassen_flat(depth=3),
      lambda: bots.strassen(depth=3)),
+    (lambda: bots.sparselu_flat(n=10),
+     lambda: bots.sparselu(n=10)),
 ])
 def test_flat_builder_matches_compiled_tree(flat, tree):
     """The iterative CSR builders are exact twins of tree compilation."""
@@ -152,7 +154,7 @@ def test_paper_scale_builds_fast_enough():
     r = simulate(topo, alloc, wl, "dfwsrpt", seed=0)
     assert time.time() - t0 < 60.0
     assert r.makespan > 0 and r.steals > 0
-    for name in ("sort", "strassen"):
+    for name in ("sort", "strassen", "sparselu"):
         assert bots.make(name, "paper").table.n >= bots.PAPER_MIN_TASKS
 
 
