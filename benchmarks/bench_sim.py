@@ -35,6 +35,7 @@ trajectory" gate.
 from __future__ import annotations
 
 import argparse
+import itertools
 import json
 import os
 import platform
@@ -127,6 +128,39 @@ def bench(quick: bool = False, reps: int = 5, threads: int = 16):
                         tasks_per_s=round(tasks / warm_s, 1),
                         makespan=r.makespan, speedup=round(r.speedup, 4),
                         steals=r.steals)
+
+
+def bench_fault_hook(reps: int = 5, threads: int = 16):
+    """Faults-off overhead rows: fft-medium under a compiled-but-neutral
+    fault plan (the engines' fault hook runs, perturbing nothing).
+
+    Keyed ``scale="medium+faulthook"`` so ``--check`` gates the hook's
+    overhead against the committed baseline the same way as every other
+    row — the plain fft-medium rows must stay ≈ the pre-fault-layer
+    numbers, and these rows must stay ≈ the plain ones.
+    """
+    machine = Machine(topology.sunfire_x4600())
+    wl = bots.fft(n=1 << 15, cutoff=4)
+    # severity-0 straggler: has_faults is set, speeds all stay 1.0
+    ctx = machine.context(threads, binding="paper", faults="straggler:0@0")
+    for engine in _engines():
+        with _engine_env(engine):
+            for sched in ("dfwsrpt",):
+                machine.run(wl, sched, seed=0, context=ctx)  # warm caches
+                warm = []
+                for _ in range(reps):
+                    t0 = time.perf_counter()
+                    r = machine.run(wl, sched, seed=0, context=ctx)
+                    warm.append(time.perf_counter() - t0)
+                warm_s = min(warm)
+                tasks = ensure_table(wl).n
+                yield dict(
+                    workload="fft", scale="medium+faulthook", tasks=tasks,
+                    scheduler=sched, engine=engine, threads=threads,
+                    build_s=0.0, cold_s=0.0, warm_s=round(warm_s, 6),
+                    tasks_per_s=round(tasks / warm_s, 1),
+                    makespan=r.makespan, speedup=round(r.speedup, 4),
+                    steals=r.steals)
 
 
 def bench_sweep(reps: int = 3):
@@ -236,7 +270,9 @@ def main() -> None:
     rows = []
     print("workload,scale,tasks,scheduler,engine,build_s,cold_s,warm_s,"
           "tasks_per_s,speedup,steals")
-    for row in bench(args.quick, args.reps, args.threads):
+    for row in itertools.chain(
+            bench(args.quick, args.reps, args.threads),
+            bench_fault_hook(args.reps, args.threads)):
         rows.append(row)
         print(f"{row['workload']},{row['scale']},{row['tasks']},"
               f"{row['scheduler']},{row['engine']},{row['build_s']:.3f},"

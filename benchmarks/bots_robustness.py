@@ -1,0 +1,203 @@
+"""Robustness study: scheduler degradation under injected faults.
+
+The paper evaluates its NUMA-aware schedulers on perfectly healthy
+cores; this driver measures how gracefully each strategy degrades when
+the machine misbehaves — the regime where load-balancing policies
+actually separate. For every scheduler (the five stock policies plus
+the hierarchical ``dfwshier``) it sweeps a fault-intensity axis per
+fault kind and reports *makespan inflation* relative to the same
+(scheduler, seed) cell with faults off:
+
+  * ``straggler`` — the master-thread core slowed ``(1+S)x``,
+    S ∈ {0.25 .. 2.0}: work-stealing should route around it;
+  * ``preempt``   — Poisson(N) offline windows per thread, queued tasks
+    reclaimed and re-stolen; tests recovery from transient loss;
+  * ``fail``      — K threads die permanently at t=span/4, their work
+    deterministically re-executed by survivors.
+
+Each (kind, intensity) point is one batched :meth:`Machine.grid` call
+over schedulers × seeds, run under ``strict=False``: a pathological
+cell (e.g. a stall under an extreme fault) degrades to a reported
+:class:`CellError` row instead of aborting the sweep — this driver
+dogfoods the hardened harness it ships with.
+
+    PYTHONPATH=src python -m benchmarks.bots_robustness [--quick]
+        [--scale {medium,paper}] [--threads N] [--seeds N] [--out PATH]
+
+``--quick`` (the CI smoke): fft-small only, one seed, a trimmed fault
+axis, and a py↔C engine-parity assertion on every cell.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+from repro.core import topology
+from repro.core.sim import CellError, Machine, bots, reset_engine_cache
+from repro.core.sim import _csim
+
+SCHEDULERS = ("bf", "cilk", "wf", "dfwspt", "dfwsrpt", "dfwshier")
+
+# fault-intensity axes; each entry is (label, spec builder(master_core))
+AXES = {
+    "straggler": [0.25, 0.5, 1.0, 2.0],
+    "preempt": [0.5, 1.0, 2.0, 4.0],
+    "fail": [1, 2, 4],
+}
+QUICK_AXES = {
+    "straggler": [1.0],
+    "preempt": [2.0],
+    "fail": [2],
+}
+
+
+def _specs(kind: str, x, master: int, span: float):
+    if kind == "straggler":
+        return f"straggler:{x}@{master}"
+    if kind == "preempt":
+        return f"preempt:{x}@{span / 8:g}"
+    return f"fail:{int(x)}@{span / 4:g}"
+
+
+def _workload(quick: bool, scale: str):
+    if quick:
+        return "fft-small", bots.fft(n=1 << 10, cutoff=8)
+    if scale == "paper":
+        return "fft-paper", bots.make("fft", "paper")
+    return "fft-medium", bots.fft(n=1 << 15, cutoff=4)
+
+
+def sweep(machine: Machine, wl, *, axes, threads: int, seeds, span: float):
+    """Yield one row per (fault kind, intensity, scheduler): mean
+    makespan over seeds, inflation vs the faults-off baseline, and the
+    fault accounting."""
+    master = machine.context(threads).thread_cores[0]
+    base = machine.grid(workloads=[wl], schedulers=SCHEDULERS,
+                        threads=threads, seeds=seeds)
+    base_res = base.run(strict=False)
+    baseline = {}
+    for k, r in base_res.items():
+        if isinstance(r, CellError):
+            continue
+        baseline.setdefault(k.scheduler, []).append(r.makespan)
+
+    for kind, xs in axes.items():
+        for x in xs:
+            spec = _specs(kind, x, master, span)
+            grid = machine.grid(workloads=[wl], schedulers=SCHEDULERS,
+                                threads=threads, seeds=seeds,
+                                faults=[spec])
+            res = grid.run(strict=False)
+            per_sched: dict = {}
+            for k, r in res.items():
+                per_sched.setdefault(k.scheduler, []).append(r)
+            for sched in SCHEDULERS:
+                cells = per_sched.get(sched, [])
+                errs = [c for c in cells if isinstance(c, CellError)]
+                ok = [c for c in cells if not isinstance(c, CellError)]
+                if not ok:
+                    yield dict(kind=kind, intensity=x, spec=spec,
+                               scheduler=sched, failed_cells=len(errs),
+                               error=str(errs[0].error) if errs else "")
+                    continue
+                mk = sum(r.makespan for r in ok) / len(ok)
+                b = sum(baseline[sched]) / len(baseline[sched])
+                yield dict(
+                    kind=kind, intensity=x, spec=spec, scheduler=sched,
+                    makespan=round(mk, 4), baseline=round(b, 4),
+                    inflation=round(mk / b, 4),
+                    reclaimed=sum(r.reclaimed for r in ok),
+                    reexec=sum(r.reexec for r in ok),
+                    fault_lost=round(sum(r.fault_lost for r in ok), 4),
+                    failed_cells=len(errs))
+
+
+def _parity_check(machine: Machine, wl, threads: int, span: float) -> int:
+    """--quick gate: every fault kind must be bit-identical py vs C."""
+    if _csim.load() is None:
+        print("# parity check skipped: C kernel unavailable "
+              f"({_csim.load_error})")
+        return 0
+    master = machine.context(threads).thread_cores[0]
+    bad = 0
+    for kind, xs in QUICK_AXES.items():
+        spec = _specs(kind, xs[0], master, span)
+        out = {}
+        for eng in ("py", "c"):
+            os.environ["REPRO_SIM_ENGINE"] = eng
+            reset_engine_cache()
+            g = machine.grid(workloads=[wl], schedulers=SCHEDULERS,
+                             threads=threads, faults=[spec])
+            out[eng] = list(g.run().values())
+        os.environ.pop("REPRO_SIM_ENGINE", None)
+        reset_engine_cache()
+        if out["py"] != out["c"]:
+            bad += 1
+            print(f"PARITY FAILURE under {spec!r}: py != c",
+                  file=sys.stderr)
+    print(f"# parity: {len(QUICK_AXES)} fault kinds x "
+          f"{len(SCHEDULERS)} schedulers, {bad} divergence(s)")
+    return bad
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke: fft-small, 1 seed, trimmed axes, "
+                         "py<->C parity assertion")
+    ap.add_argument("--scale", choices=("medium", "paper"),
+                    default="medium")
+    ap.add_argument("--threads", type=int, default=16)
+    ap.add_argument("--seeds", type=int, default=3)
+    ap.add_argument("--out", default=None,
+                    help="write rows as JSON (default: stdout only)")
+    args = ap.parse_args()
+
+    machine = Machine(topology.sunfire_x4600())
+    name, wl = _workload(args.quick, args.scale)
+    axes = QUICK_AXES if args.quick else AXES
+    seeds = tuple(range(1 if args.quick else args.seeds))
+    # fault horizon ~ the healthy makespan scale, so windows land
+    # inside the run for small and paper workloads alike
+    probe = machine.run(wl, "wf", threads=args.threads)
+    span = max(probe.makespan / 2, 1.0)
+
+    t0 = time.perf_counter()
+    rows = []
+    print("kind,intensity,scheduler,makespan,baseline,inflation,"
+          "reclaimed,reexec,fault_lost,failed_cells")
+    for row in sweep(machine, wl, axes=axes, threads=args.threads,
+                     seeds=seeds, span=span):
+        rows.append(row)
+        if "makespan" in row:
+            print(f"{row['kind']},{row['intensity']},{row['scheduler']},"
+                  f"{row['makespan']:.2f},{row['baseline']:.2f},"
+                  f"{row['inflation']:.4f},{row['reclaimed']},"
+                  f"{row['reexec']},{row['fault_lost']:.2f},"
+                  f"{row['failed_cells']}", flush=True)
+        else:
+            print(f"{row['kind']},{row['intensity']},{row['scheduler']},"
+                  f"FAILED,,,,,,{row['failed_cells']}", flush=True)
+    dt = time.perf_counter() - t0
+    print(f"# {len(rows)} rows ({name}, T={args.threads}, "
+          f"seeds={len(seeds)}) in {dt:.1f}s")
+
+    bad = _parity_check(machine, wl, args.threads, span) if args.quick \
+        else 0
+
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(dict(workload=name, threads=args.threads,
+                           seeds=len(seeds), span=span, rows=rows),
+                      f, indent=1, sort_keys=True)
+        print(f"# wrote {args.out}")
+    if bad:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,10 +1,13 @@
-from .runtime import (TaskSpec, Workload, SimParams, SimResult, simulate,
-                      run_context, serial_time, SCHEDULERS, SchedulerSpec,
-                      TaskTable, ensure_table, reset_engine_cache)
+from .runtime import (TaskSpec, Workload, SimParams, SimResult, SimStalled,
+                      simulate, run_context, serial_time, SCHEDULERS,
+                      SchedulerSpec, TaskTable, ensure_table,
+                      reset_engine_cache)
 from .policy import register, get_spec, compile_victim_plan
 from .context import (BindingSpec, PlacementSpec, ExecContext, BINDINGS,
                       PLACEMENTS, register_binding, register_placement,
                       get_binding, get_placement)
+from .faults import (FaultSpec, FaultPlan, FAULTS, register_fault,
+                     get_fault, get_faults, compile_fault_plan)
 from .machine import Machine, Grid, GridKey
-from .sweep import SweepConfig, SweepPlan, run_sweep
-from . import bots, context, machine, policy, sweep
+from .sweep import SweepConfig, SweepPlan, CellError, run_sweep
+from . import bots, context, faults, machine, policy, sweep

@@ -20,6 +20,7 @@
  * no per-task allocation happens anywhere.
  */
 
+#include <math.h>
 #include <stdint.h>
 #include <stdlib.h>
 #include <string.h>
@@ -340,6 +341,63 @@ static inline int64_t ring_pop_front(ring_t *r)
 }
 
 /* ------------------------------------------------------------------ */
+/* Fault handling (transcribed from _engine_py.go_offline)            */
+/* ------------------------------------------------------------------ */
+
+typedef struct {
+    heap_t *evq;
+    pyset_t *parked;
+    ring_t *local;
+    ring_t *shared;
+    const double *fwend;
+    double wake_latency;
+    int depth_first;
+    uint64_t *seq;
+    int64_t *reclaimed;
+} fault_env_t;
+
+/* Thread `th` hits offline window `cidx` at `now`, carrying `task` if
+ * >= 0. The in-hand task is re-queued (stealable); queued tasks stay
+ * in place but one thief is woken per task so they are reclaimed by
+ * stealing. A finite window resumes the thread with a fresh acquire at
+ * the window end; end == inf is a permanent failure — no resume, and
+ * an empty-handed dead thread passes a consumed wake on so live work
+ * cannot strand. Returns nonzero on allocation failure. */
+static int go_offline(fault_env_t *env, double now, int64_t th,
+                      int64_t task, int64_t cidx)
+{
+    int64_t nq = env->depth_first ? (int64_t)env->local[th].len : 0;
+    if (task >= 0) {
+        nq++;
+        if (env->depth_first) {
+            if (ring_push_back(&env->local[th], task)) return -1;
+        } else {
+            if (ring_push_back(env->shared, task)) return -1;
+        }
+    }
+    *env->reclaimed += nq;
+    while (nq > 0 && env->parked->used) {
+        ++*env->seq;
+        if (heap_push(env->evq, now + env->wake_latency, *env->seq,
+                      (int32_t)pyset_pop(env->parked), -1))
+            return -1;
+        nq--;
+    }
+    if (env->fwend[cidx] != INFINITY) {
+        ++*env->seq;
+        if (heap_push(env->evq, env->fwend[cidx], *env->seq,
+                      (int32_t)th, -1))
+            return -1;
+    } else if (task < 0 && env->parked->used) {
+        ++*env->seq;
+        if (heap_push(env->evq, now, *env->seq,
+                      (int32_t)pyset_pop(env->parked), -1))
+            return -1;
+    }
+    return 0;
+}
+
+/* ------------------------------------------------------------------ */
 /* Simulator                                                          */
 /* ------------------------------------------------------------------ */
 
@@ -354,9 +412,14 @@ static inline int64_t ring_pop_front(ring_t *r)
  *        steal_time, spawn_time, wake_latency, qop_time, cache_refill,
  *        mem_intensity, migration_rate]
  * ipar: [T, num_cores, num_nodes, n_tasks, queue_shared, child_first,
- *        seed, runtime_data_node(-1=none), root_node0]
- * dout: [makespan, remote, total_exec, queue_wait]
- * iout: [steals, failed_probes]
+ *        seed, runtime_data_node(-1=none), root_node0, has_faults,
+ *        max_steps(<=0 = unlimited)]
+ * fault plan (consulted only when has_faults): fspeed (num_cores
+ * per-core cost multipliers), fwoff (T+1 CSR offsets), fwstart/fwend
+ * (merged offline windows per thread; end == inf = permanent failure)
+ * dout: [makespan, remote, total_exec, queue_wait, fault_lost, last_t]
+ * iout: [steals, failed_probes, reclaimed, reexec, executed, steps,
+ *        status(0 ok, 1 watchdog, 2 stranded work)]
  * returns 0 on success, negative on allocation failure.
  */
 int sim_run(const double *dpar, const int64_t *ipar,
@@ -372,6 +435,10 @@ int sim_run(const double *dpar, const int64_t *ipar,
             const int64_t *vp_unit_off,    /* n_groups+1 */
             const int64_t *vp_victim_off,  /* n_units+1 */
             const int64_t *vp_victims,     /* total victim slots */
+            const double *fspeed,          /* num_cores (faults) */
+            const int64_t *fwoff,          /* T+1 (faults) */
+            const double *fwstart,         /* n_windows (faults) */
+            const double *fwend,           /* n_windows (faults) */
             double *dout, int64_t *iout)
 {
     const double hop_lambda = dpar[0], hop_lambda_steal = dpar[1];
@@ -387,7 +454,11 @@ int sim_run(const double *dpar, const int64_t *ipar,
     const uint32_t seed = (uint32_t)ipar[6];
     const int64_t rdn = ipar[7];
     const int64_t rnode0 = ipar[8];
+    const int has_faults = (int)ipar[9];
+    int64_t max_steps = ipar[10];
     const double mu_lam = mem_intensity * hop_lambda;
+    if (max_steps <= 0)
+        max_steps = INT64_MAX;
 
     int rc = -1;
     rk_state rng;
@@ -400,9 +471,13 @@ int sim_run(const double *dpar, const int64_t *ipar,
     int64_t *uidx = (int64_t *)malloc((size_t)(T > 1 ? T : 1) * sizeof(int64_t));
     double *dl_free = (double *)calloc((size_t)T, sizeof(double));
     ring_t *local = (ring_t *)calloc((size_t)T, sizeof(ring_t));
+    int64_t *wcur = (int64_t *)malloc((size_t)T * sizeof(int64_t));
     if (!pending || !exec_node || !phase || !order || !uidx || !dl_free ||
-        !local)
+        !local || !wcur)
         goto fail1;
+    if (has_faults)
+        for (int64_t i = 0; i < T; i++)
+            wcur[i] = fwoff[i];
     for (int64_t i = 0; i < T; i++)
         if (ring_init(&local[i], 256)) goto fail1;
     ring_t shared;
@@ -415,7 +490,11 @@ int sim_run(const double *dpar, const int64_t *ipar,
     double sl_free = 0.0, sl_waited = 0.0;
     double remote = 0.0, total_exec = 0.0, makespan = 0.0;
     int64_t steals = 0, failed = 0, live = 1;
+    int64_t reclaimed = 0, reexec = 0, executed = 0, steps = 0, status = 0;
+    double fault_lost = 0.0, last_t = 0.0;
     uint64_t seq = 0;
+    fault_env_t fenv = {&evq, &parked, local, &shared, fwend,
+                        wake_latency, depth_first, &seq, &reclaimed};
 
     /* ignition: master runs the root, workers go hunting */
     seq++; if (heap_push(&evq, 0.0, seq, 0, 0)) goto fail4;
@@ -429,6 +508,23 @@ int sim_run(const double *dpar, const int64_t *ipar,
         double t = ev.t;
         int64_t th = ev.th;
         int64_t task = ev.task;
+
+        if (++steps > max_steps) {
+            status = 1;
+            last_t = t;
+            break;
+        }
+        if (has_faults) {
+            int64_t c = wcur[th];
+            const int64_t lim = fwoff[th + 1];
+            while (c < lim && fwend[c] <= t)
+                c++;
+            wcur[th] = c;
+            if (c < lim && fwstart[c] <= t) {
+                if (go_offline(&fenv, t, th, task, c)) goto fail4;
+                continue;
+            }
+        }
 
         if (task < 0) {
             /* ---- acquire: local pop / steal sweep / shared FIFO ---- */
@@ -521,9 +617,31 @@ int sim_run(const double *dpar, const int64_t *ipar,
                                fp[task] * (double)node_dist[n * NN + pn]);
         double w = wp[task];
         double cost = w * (1.0 + pen);
+        if (has_faults) {
+            cost = cost * fspeed[core];
+            int64_t c = wcur[th];
+            const int64_t lim = fwoff[th + 1];
+            /* t advanced during acquire (probes, locks): windows may
+             * have closed — or opened — since the top-of-loop check. */
+            while (c < lim && fwend[c] <= t)
+                c++;
+            wcur[th] = c;
+            if (c < lim && fwstart[c] < t + cost) {
+                /* preempted/killed mid-execution: partial work is lost
+                 * and the task re-executes */
+                double s = fwstart[c];
+                if (s < t)
+                    s = t;
+                fault_lost += s - t;
+                reexec++;
+                if (go_offline(&fenv, s, th, task, c)) goto fail4;
+                continue;
+            }
+        }
         remote += w * pen;
         total_exec += cost;
         t += cost;
+        executed++;
 
         const int64_t nk = nc[task];
         if (nk) {
@@ -640,6 +758,8 @@ int sim_run(const double *dpar, const int64_t *ipar,
                 double pen2 = mu_lam * (fr[parent] * root_dist[n] +
                                         fp[parent] * (double)node_dist[n * NN + pn2]);
                 double c2 = w2 * (1.0 + pen2);
+                if (has_faults)
+                    c2 = c2 * fspeed[core];
                 remote += w2 * pen2;
                 total_exec += c2;
                 t += c2;
@@ -652,12 +772,23 @@ int sim_run(const double *dpar, const int64_t *ipar,
         if (heap_push(&evq, t, seq, (int32_t)th, -1)) goto fail4;
     }
 
+    if (status == 0 && executed != n_tasks)
+        status = 2;             /* loop drained with work stranded */
+    if (status != 1)
+        last_t = makespan;
     dout[0] = makespan;
     dout[1] = remote;
     dout[2] = total_exec;
     dout[3] = sl_waited;
+    dout[4] = fault_lost;
+    dout[5] = last_t;
     iout[0] = steals;
     iout[1] = failed;
+    iout[2] = reclaimed;
+    iout[3] = reexec;
+    iout[4] = executed;
+    iout[5] = steps;
+    iout[6] = status;
     rc = 0;
 
 fail4:
@@ -670,6 +801,7 @@ fail1:
     if (local)
         for (int64_t i = 0; i < T; i++)
             free(local[i].buf);
+    free(wcur);
     free(local); free(dl_free); free(uidx); free(order);
     free(phase); free(exec_node); free(pending);
     return rc;
@@ -678,8 +810,8 @@ fail1:
 /* Batched sweep entry: run n_cfg prepared configs back to back without
  * re-crossing the Python boundary per run. Every per-config argument
  * arrives as an array of pointers (one per config, same order as the
- * sim_run parameters); outputs land in flat dout (4 per config) and
- * iout (2 per config) blocks. Stops at the first failing config and
+ * sim_run parameters); outputs land in flat dout (6 per config) and
+ * iout (7 per config) blocks. Stops at the first failing config and
  * returns its negative 1-based index; 0 on success.
  */
 int sim_run_batch(int64_t n_cfg,
@@ -691,6 +823,8 @@ int sim_run_batch(int64_t n_cfg,
                   void **cores,
                   void **vp_group_off, void **vp_unit_off,
                   void **vp_victim_off, void **vp_victims,
+                  void **fspeed, void **fwoff,
+                  void **fwstart, void **fwend,
                   double *dout, int64_t *iout)
 {
     for (int64_t i = 0; i < n_cfg; i++) {
@@ -706,7 +840,9 @@ int sim_run_batch(int64_t n_cfg,
             (int64_t *)cores[i],
             (const int64_t *)vp_group_off[i], (const int64_t *)vp_unit_off[i],
             (const int64_t *)vp_victim_off[i], (const int64_t *)vp_victims[i],
-            dout + 4 * i, iout + 2 * i);
+            (const double *)fspeed[i], (const int64_t *)fwoff[i],
+            (const double *)fwstart[i], (const double *)fwend[i],
+            dout + 6 * i, iout + 7 * i);
         if (rc != 0)
             return (int)-(i + 1);
     }

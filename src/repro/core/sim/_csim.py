@@ -89,12 +89,13 @@ def load():
             _i64p, _i64p, _f64p,              # core_node, node_dist, root_dist
             _i64p,                            # cores (in/out)
             _i64p, _i64p, _i64p, _i64p,       # victim plan (goff/uoff/voff/v)
+            _f64p, _i64p, _f64p, _f64p,       # fault plan (speed/off/start/end)
             _f64p, _i64p,                     # dout, iout
         ]
         lib.sim_run_batch.restype = ct.c_int
-        # n_cfg, then 19 arrays of per-config pointers, then flat outputs
+        # n_cfg, then 23 arrays of per-config pointers, then flat outputs
         lib.sim_run_batch.argtypes = (
-            [ct.c_int64] + [_uptr] * 19 + [_f64p, _i64p])
+            [ct.c_int64] + [_uptr] * 23 + [_f64p, _i64p])
         lib.mt_selftest.restype = None
         lib.mt_selftest.argtypes = [ct.c_uint32, ct.c_int64, _u32p]
         lib.shuffle_selftest.restype = None
@@ -109,10 +110,16 @@ def load():
     return _lib
 
 
+# zero-length placeholders for the fault-plan slots when no faults are
+# configured (ipar[9] == 0: the kernel never dereferences them)
+_NO_F64 = np.zeros(0, dtype=np.float64)
+_NO_I64 = np.zeros(0, dtype=np.int64)
+
+
 def _marshal(ctx):
     """Lower one prepared context into the sim_run argument tuple.
 
-    Returns the 19 arrays in kernel parameter order plus the mutable
+    Returns the 23 arrays in kernel parameter order plus the mutable
     ``cores`` array (migration writes back thread→core bindings).
     """
     tbl = ctx["table"]
@@ -123,27 +130,39 @@ def _marshal(ctx):
         ctx["mem_intensity"], ctx["migration_rate"],
     ], dtype=np.float64)
     rdn = ctx["runtime_data_node"]
+    fplan = ctx.get("fault_plan")
     ipar = np.array([
         ctx["T"], ctx["num_cores"], ctx["num_nodes"], tbl.n,
         int(ctx["queue_shared"]), int(ctx["child_first"]), ctx["seed"],
         -1 if rdn is None else int(rdn), ctx["root_node0"],
+        int(fplan is not None), int(ctx.get("max_steps") or 0),
     ], dtype=np.int64)
     cores = np.ascontiguousarray(ctx["cores"], dtype=np.int64)
     goff, uoff, voff, victims = ctx["vplan"].flat()
+    if fplan is None:
+        fspeed, fwoff, fwstart, fwend = _NO_F64, _NO_I64, _NO_F64, _NO_F64
+    else:
+        fspeed, fwoff = fplan.speed, fplan.win_off
+        fwstart, fwend = fplan.win_start, fplan.win_end
     args = (dpar, ipar,
             tbl.work_pre, tbl.work_post, tbl.f_root, tbl.f_parent,
             tbl.first_child, tbl.num_children, tbl.first_post, tbl.num_post,
             tbl.parent,
             ctx["core_node_arr"], ctx["node_dist_flat"], ctx["root_dist"],
             cores,
-            goff, uoff, voff, victims)
+            goff, uoff, voff, victims,
+            fspeed, fwoff, fwstart, fwend)
     return args, cores
 
 
 def _unpack(dout, iout):
     return dict(makespan=float(dout[0]), remote=float(dout[1]),
                 total_exec=float(dout[2]), queue_wait=float(dout[3]),
-                steals=int(iout[0]), failed=int(iout[1]))
+                fault_lost=float(dout[4]), last_t=float(dout[5]),
+                steals=int(iout[0]), failed=int(iout[1]),
+                reclaimed=int(iout[2]), reexec=int(iout[3]),
+                executed=int(iout[4]), steps=int(iout[5]),
+                status=int(iout[6]))
 
 
 def run(ctx) -> dict:
@@ -151,8 +170,8 @@ def run(ctx) -> dict:
     lib = load()
     assert lib is not None
     args, cores = _marshal(ctx)
-    dout = np.zeros(4, dtype=np.float64)
-    iout = np.zeros(2, dtype=np.int64)
+    dout = np.zeros(6, dtype=np.float64)
+    iout = np.zeros(7, dtype=np.int64)
     rc = lib.sim_run(*args, dout, iout)
     if rc != 0:
         raise MemoryError(f"C sim kernel failed with code {rc}")
@@ -173,19 +192,19 @@ def run_batch(ctxs) -> list[dict]:
         return []
     n = len(ctxs)
     marshalled = [_marshal(ctx) for ctx in ctxs]
-    # 19 pointer tables, one per kernel parameter position
+    # 23 pointer tables, one per kernel parameter position
     ptr_tables = [
         np.ascontiguousarray(
             [m[0][k].ctypes.data for m in marshalled], dtype=np.uintp)
-        for k in range(19)
+        for k in range(23)
     ]
-    dout = np.zeros(4 * n, dtype=np.float64)
-    iout = np.zeros(2 * n, dtype=np.int64)
+    dout = np.zeros(6 * n, dtype=np.float64)
+    iout = np.zeros(7 * n, dtype=np.int64)
     rc = lib.sim_run_batch(n, *ptr_tables, dout, iout)
     if rc != 0:
         raise MemoryError(f"C sim kernel failed on batch config "
                           f"{-rc - 1} of {n}")
     for ctx, (_, cores) in zip(ctxs, marshalled):
         ctx["cores"][:] = [int(c) for c in cores]
-    return [_unpack(dout[4 * i:4 * i + 4], iout[2 * i:2 * i + 2])
+    return [_unpack(dout[6 * i:6 * i + 6], iout[7 * i:7 * i + 7])
             for i in range(n)]

@@ -19,6 +19,26 @@ spec's ``queue_shared`` / ``child_first`` flags and a compiled
 :class:`~.policy.VictimPlan`, whose pre-lowered group list is
 interpreted per steal sweep (a fully static plan skips even that).
 
+Fault injection works the same way: the context may carry a compiled
+:class:`~.faults.FaultPlan` (per-core speed multipliers + per-thread
+merged offline windows in flat CSR arrays). The loop consults it at two
+points — when a thread's event fires (is the thread offline now?) and
+when an execution cost is known (does an offline window interrupt it?).
+A thread entering a finite window re-queues its in-hand task (stealable
+by others), makes its queued tasks reclaimable (one thief wake per
+task), and resumes with a fresh acquire at the window end; a window
+ending at ``+inf`` is a permanent failure — the thread's work is
+reclaimed the same way and it never reschedules, passing any wake it
+consumed on so queued work cannot strand. All fault randomness was
+drawn at plan-compile time from a dedicated stream, so the engine's own
+``RandomState(seed)`` draw order — and therefore every fault-free
+result — is untouched bit for bit.
+
+A step-count watchdog (``ctx["max_steps"]``) converts a hung event
+loop into a diagnosable ``status=1`` return instead of an infinite
+loop; ``status=2`` reports a drained loop that completed fewer tasks
+than the table holds (stranded work).
+
 The C kernel (:mod:`._csim`) is a transcription of this loop; the
 golden-parity suite pins both to fixtures recorded from the seed
 engine.
@@ -65,6 +85,17 @@ def run(ctx) -> dict:
     plan_groups = vplan.py_groups
     static_orders = vplan.static_order
     shuffle = rng.shuffle
+    INF = float("inf")
+    max_steps = ctx.get("max_steps") or (1 << 62)
+    fplan = ctx.get("fault_plan")
+    have_faults = fplan is not None
+    if have_faults:
+        fspeed = fplan.speed.tolist()
+        fwstart = fplan.win_start.tolist()
+        fwend = fplan.win_end.tolist()
+        fwoff = fplan.win_off.tolist()
+        wcur = fwoff[:T]          # per-thread window cursor (monotone)
+        wlim = fwoff[1:T + 1]
 
     # --- precomputed cost tables (exact seed expressions) ---
     cls_fr = tbl.cls_f_root.tolist()
@@ -120,6 +151,41 @@ def run(ctx) -> dict:
     pending = [0] * n_tasks
     exec_node = [0] * n_tasks
     phase = bytearray(n_tasks)
+    reclaimed = 0
+    reexec = 0
+    fault_lost = 0.0
+    executed = 0
+    steps = 0
+    status = 0
+    last_t = 0.0
+
+    def go_offline(now, th, task, cidx):
+        # Thread `th` hits offline window `cidx` at `now`, carrying
+        # `task` if >= 0. The in-hand task is re-queued (stealable);
+        # queued tasks stay in place but one thief is woken per task so
+        # they are reclaimed by stealing. A finite window resumes the
+        # thread with a fresh acquire at the window end; end == inf is a
+        # permanent failure — no resume, and an empty-handed dead thread
+        # passes a consumed wake on so live work cannot strand.
+        nonlocal seq, reclaimed
+        nq = len(local[th]) if depth_first else 0
+        if task >= 0:
+            nq += 1
+            if depth_first:
+                local[th].append(task)
+            else:
+                shared.append(task)
+        reclaimed += nq
+        while nq > 0 and parked:
+            seq += 1
+            heappush(events, (now + wake_latency, seq, parked.pop(), -1))
+            nq -= 1
+        if fwend[cidx] != INF:
+            seq += 1
+            heappush(events, (fwend[cidx], seq, th, -1))
+        elif task < 0 and parked:
+            seq += 1
+            heappush(events, (now, seq, parked.pop(), -1))
 
     # ignition: master (thread 0) runs the root; workers go hunting
     seq += 1
@@ -130,6 +196,20 @@ def run(ctx) -> dict:
 
     while events:
         t, _, th, task = heappop(events)
+        steps += 1
+        if steps > max_steps:
+            status = 1
+            last_t = t
+            break
+        if have_faults:
+            c = wcur[th]
+            lim = wlim[th]
+            while c < lim and fwend[c] <= t:
+                c += 1
+            wcur[th] = c
+            if c < lim and fwstart[c] <= t:
+                go_offline(t, th, task, c)
+                continue
         if task < 0:
             # ---- acquire: local pop / steal sweep / shared FIFO ----
             if depth_first:
@@ -210,9 +290,30 @@ def run(ctx) -> dict:
         pen = row[pn]
         w = wp_l[task]
         cost = w * (1.0 + pen)
+        if have_faults:
+            cost = cost * fspeed[core]
+            c = wcur[th]
+            lim = wlim[th]
+            # t advanced during acquire (probes, locks): windows may
+            # have closed — or opened — since the top-of-loop check.
+            while c < lim and fwend[c] <= t:
+                c += 1
+            wcur[th] = c
+            if c < lim and fwstart[c] < t + cost:
+                # preempted/killed mid-execution: partial work is lost
+                # and the task re-executes (here after the window, or
+                # wherever it is stolen to meanwhile).
+                s = fwstart[c]
+                if s < t:
+                    s = t
+                fault_lost += s - t
+                reexec += 1
+                go_offline(s, th, task, c)
+                continue
         remote += w * pen
         total_exec += cost
         t += cost
+        executed += 1
 
         nk = nc_l[task]
         if nk:
@@ -309,6 +410,8 @@ def run(ctx) -> dict:
                     row2 = pen_row(cls_l[parent], n)
                 pen2 = row2[pn2]
                 c2 = w2 * (1.0 + pen2)
+                if have_faults:
+                    c2 = c2 * fspeed[core]
                 remote += w2 * pen2
                 total_exec += c2
                 t += c2
@@ -318,5 +421,12 @@ def run(ctx) -> dict:
         seq += 1
         heappush(events, (t, seq, th, -1))
 
+    if status == 0 and executed != n_tasks:
+        status = 2          # loop drained with work stranded
+        last_t = makespan
+    elif status == 0:
+        last_t = makespan
     return dict(makespan=makespan, remote=remote, total_exec=total_exec,
-                queue_wait=sl_waited, steals=steals, failed=failed)
+                queue_wait=sl_waited, steals=steals, failed=failed,
+                reclaimed=reclaimed, reexec=reexec, fault_lost=fault_lost,
+                executed=executed, steps=steps, status=status, last_t=last_t)

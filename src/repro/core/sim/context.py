@@ -56,6 +56,7 @@ import numpy as np
 from ..placement import first_touch_spill
 from ..priority import allocate_threads, priorities
 from ..topology import Topology, lazy_cache
+from .faults import get_faults
 
 __all__ = [
     "BindingSpec", "PlacementSpec", "ExecContext",
@@ -376,6 +377,9 @@ class ExecContext:
     runtime_data_node: Optional[int] = None
     migration_rate: float = 0.0
     bind_seed: int = 0
+    # declarative fault models (FaultSpec tuple); lowered per simulation
+    # seed into a compiled FaultPlan by the engine entry point.
+    faults: tuple = ()
 
     @property
     def threads(self) -> int:
@@ -397,18 +401,27 @@ class ExecContext:
     def compile(cls, topo: Topology, params, threads: Optional[int] = None,
                 binding="paper", placement="first_touch",
                 runtime_data="local", migration_rate: float = 0.0,
-                bind_seed: int = 0) -> "ExecContext":
+                bind_seed: int = 0, faults=()) -> "ExecContext":
         """Resolve + lower + validate a declarative context description.
 
         ``runtime_data``: ``"local"`` (each thread's runtime structures
         on its own node — the paper's modification), ``"master"`` (all
         on the master's node), or an explicit node id (baseline Nanos
         first-touches everything on the initializing node).
+
+        ``faults``: fault model(s) — specs, parametrized strings
+        (``"straggler:0.5@2"``, ``"preempt:2@10"``, ``"fail:1"``), or a
+        sequence composing several. Validated here; the stochastic
+        lowering into a :class:`~.faults.FaultPlan` happens per
+        simulation seed at run time.
         """
         bspec = get_binding(binding)
         pspec = get_placement(placement)
         cores = bspec.lower(topo, threads, seed=bind_seed)
         nodes = pspec.lower(topo, cores[0])
+        fault_specs = get_faults(faults)
+        for fspec in fault_specs:
+            fspec.validate(topo, len(cores))
         if runtime_data == "local" or runtime_data is None:
             rt_node = None
         elif runtime_data == "master":
@@ -427,7 +440,7 @@ class ExecContext:
         return cls(topo=topo, params=params, binding=bspec, placement=pspec,
                    thread_cores=cores, root_data_nodes=nodes,
                    runtime_data_node=rt_node, migration_rate=migration_rate,
-                   bind_seed=bind_seed)
+                   bind_seed=bind_seed, faults=fault_specs)
 
     @classmethod
     def from_raw(cls, topo: Topology, params, thread_cores: Sequence[int],

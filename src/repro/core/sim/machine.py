@@ -37,6 +37,7 @@ from typing import Optional, Sequence
 from ..topology import Topology
 from . import policy
 from .context import ExecContext
+from .faults import get_faults
 from .runtime import SimParams, SimResult, Workload, run_context
 from .runtime import serial_time as _serial_time
 from .sweep import SweepPlan
@@ -45,13 +46,19 @@ __all__ = ["Machine", "Grid", "GridKey"]
 
 
 GridKey = collections.namedtuple(
-    "GridKey", ["workload", "scheduler", "context", "threads", "seed"])
+    "GridKey", ["workload", "scheduler", "context", "threads", "seed",
+                "faults"], defaults=("none",))
 GridKey.__doc__ = """One cell of a :meth:`Machine.grid`.
 
 ``workload``/``scheduler`` are names, ``context`` is the variant label
 (``bindings × placements`` gives ``"binding/placement"``; an explicit
-``contexts=`` mapping gives its keys), ``threads``/``seed`` are ints.
+``contexts=`` mapping gives its keys), ``threads``/``seed`` are ints,
+``faults`` is the fault-axis label (``"none"`` when unperturbed).
 """
+
+
+def _fault_label(specs: tuple) -> str:
+    return ",".join(s.name for s in specs) if specs else "none"
 
 
 def _sched_name(scheduler) -> str:
@@ -80,11 +87,13 @@ class Grid:
             merged.keys.extend(g.keys)
         return merged
 
-    def run(self) -> "dict[GridKey, SimResult]":
+    def run(self, strict: bool = True) -> "dict[GridKey, SimResult]":
         """Run the whole grid in one batched engine call.
 
         Returns ``{GridKey: SimResult}`` in cell order — bit-identical,
         cell for cell, to looping ``simulate()`` over the same grid.
+        Under ``strict=False`` a failing cell maps to a
+        :class:`~.sweep.CellError` instead of aborting the batch.
         """
         if len(set(self.keys)) != len(self.keys):
             seen: set = set()
@@ -93,7 +102,7 @@ class Grid:
                 f"grid has duplicate cells (e.g. {dup}); the result dict "
                 "would silently drop them — dedupe schedulers/seeds or "
                 "the grids passed to Grid.concat")
-        return dict(zip(self.keys, self.plan.run()))
+        return dict(zip(self.keys, self.plan.run(strict=strict)))
 
 
 class Machine:
@@ -116,7 +125,8 @@ class Machine:
     def context(self, threads: Optional[int] = None, *,
                 binding="paper", placement="first_touch",
                 runtime_data="local", migration_rate: float = 0.0,
-                bind_seed: Optional[int] = None) -> ExecContext:
+                bind_seed: Optional[int] = None,
+                faults=()) -> ExecContext:
         """Compile (and cache) one execution context.
 
         Args:
@@ -135,6 +145,10 @@ class Machine:
             (baseline Nanos leaves threads unbound).
           bind_seed: tie-break seed for the ``"paper"`` binding
             (default: the Machine's).
+          faults: declarative fault model(s) — :class:`~.faults.FaultSpec`,
+            a parametrized string (``"straggler:0.5@2"``, ``"preempt:2@10"``,
+            ``"fail:1@30"``), or a sequence composing several. The
+            stochastic lowering happens per simulation seed at run time.
         """
         if bind_seed is None:
             bind_seed = self.bind_seed
@@ -142,8 +156,9 @@ class Machine:
             if isinstance(binding, (list, range)) else binding
         placement = tuple(int(n) for n in placement) \
             if isinstance(placement, (list, range)) else placement
+        faults = get_faults(faults)     # normalized: hashable + validated
         key = (threads, binding, placement, runtime_data, migration_rate,
-               bind_seed)
+               bind_seed, faults)
         try:
             ctx = self._contexts.get(key)
         except TypeError:           # unhashable spec forms: compile fresh
@@ -151,7 +166,7 @@ class Machine:
         if ctx is None:
             ctx = ExecContext.compile(
                 self.topo, self.params, threads, binding, placement,
-                runtime_data, migration_rate, bind_seed)
+                runtime_data, migration_rate, bind_seed, faults)
             if key is not None:
                 self._contexts[key] = ctx
         return ctx
@@ -187,7 +202,7 @@ class Machine:
     def grid(self, *, workloads, schedulers, threads=None,
              bindings=("paper",), placements=("first_touch",),
              contexts=None, seeds=(0,), runtime_data="local",
-             migration_rate: float = 0.0,
+             migration_rate: float = 0.0, faults=None,
              serial_reference=None) -> Grid:
         """Expand a cartesian product into one batched :class:`Grid`.
 
@@ -210,9 +225,21 @@ class Machine:
           seeds: simulation seeds.
           runtime_data, migration_rate: defaults for every variant
             (``contexts=`` values override per variant).
+          faults: a fault *axis* crossed with everything else — a
+            sequence of fault descriptions (each a spec, string, ``()``
+            / ``None`` for the unperturbed baseline, or a sequence
+            composing several); ``None`` (default) keeps every cell
+            fault-free. Cell keys carry the fault label (``"none"``
+            for the baseline).
           serial_reference: speedup denominator — ``None`` (per-cell
             default), one float for every cell, or ``{workload name:
             float}`` (the paper's one-serial-per-benchmark convention).
+
+        Validation is aggregated: every invalid cell in the expansion —
+        unknown scheduler, bad binding/placement, malformed fault — is
+        collected and reported in one ``ValueError`` listing each
+        offending (workload, scheduler, context) label, instead of
+        failing fast on the first.
 
         Returns a :class:`Grid`; ``.run()`` gives ``{GridKey:
         SimResult}``, bit-identical to the hand-written per-cell loop.
@@ -229,8 +256,6 @@ class Machine:
                              "{name: workload} mapping to disambiguate")
         if isinstance(schedulers, (str, policy.SchedulerSpec)):
             schedulers = [schedulers]
-        for s in schedulers:
-            policy.get_spec(s)      # fail fast, before any lowering
         if threads is None:
             thread_counts: Sequence = (None,)
         elif isinstance(threads, int):
@@ -253,6 +278,18 @@ class Machine:
                              "silently win")
         base_kw = dict(runtime_data=runtime_data,
                        migration_rate=migration_rate)
+        errors: list = []
+
+        # the fault axis: each entry lowers to a normalized spec tuple
+        # + display label; malformed entries join the aggregated report
+        fault_axis: list = []
+        for f in ([None] if faults is None else faults):
+            try:
+                specs = get_faults(f)
+            except (ValueError, TypeError) as e:
+                errors.append(f"fault axis entry {f!r}: {e}")
+                continue
+            fault_axis.append((specs, _fault_label(specs)))
 
         def serial_for(name):
             if serial_reference is None:
@@ -268,11 +305,30 @@ class Machine:
             ctx_kw = dict(ctx_kw)
             pinned = ctx_kw.pop("threads", None)
             serial = serial_for(wl_name)
-            for T in (thread_counts if pinned is None else (pinned,)):
-                ectx = self.context(T, **{**base_kw, **ctx_kw})
+            for T, (fspecs, flabel) in itertools.product(
+                    (thread_counts if pinned is None else (pinned,)),
+                    fault_axis):
+                try:
+                    ectx = self.context(
+                        T, **{**base_kw, **ctx_kw, "faults": fspecs})
+                except (ValueError, TypeError) as e:
+                    errors.append(f"grid cell (*/{label}/T={T}"
+                                  f"/faults={flabel}): {e}")
+                    continue
                 for sched, seed in itertools.product(schedulers, seeds):
-                    plan.add_context(ectx, wl, sched, seed=seed,
-                                     serial_reference=serial)
-                    keys.append(GridKey(wl_name, _sched_name(sched), label,
-                                        ectx.threads, seed))
+                    cell = (f"grid cell ({wl_name}/{_sched_name(sched)}/"
+                            f"{label}/T={ectx.threads}/seed={seed}"
+                            f"/faults={flabel})")
+                    cfg = plan.add_context(ectx, wl, sched, seed=seed,
+                                           serial_reference=serial,
+                                           label=cell, errors=errors)
+                    if cfg is not None:
+                        keys.append(GridKey(wl_name, _sched_name(sched),
+                                            label, ectx.threads, seed,
+                                            flabel))
+        if errors:
+            uniq = list(dict.fromkeys(errors))
+            raise ValueError(
+                f"{len(errors)} invalid grid cell(s):\n  "
+                + "\n  ".join(uniq))
         return Grid(plan, keys)

@@ -79,6 +79,7 @@ from __future__ import annotations
 
 import dataclasses
 import os
+import warnings
 from typing import Optional, Sequence
 
 import numpy as np
@@ -86,14 +87,55 @@ import numpy as np
 from ..topology import Topology, lazy_cache
 from . import _csim, _engine_py, policy
 from .context import ExecContext
+from .faults import compile_fault_plan
 from .policy import SCHEDULERS, SchedulerSpec
 from .table import TaskTable, compile_tree
 
 __all__ = [
-    "TaskSpec", "Workload", "SimParams", "SimResult", "simulate",
-    "run_context", "serial_time", "SCHEDULERS", "SchedulerSpec",
-    "TaskTable", "ensure_table", "reset_engine_cache",
+    "TaskSpec", "Workload", "SimParams", "SimResult", "SimStalled",
+    "simulate", "run_context", "serial_time", "SCHEDULERS",
+    "SchedulerSpec", "TaskTable", "ensure_table", "reset_engine_cache",
 ]
+
+
+class SimStalled(RuntimeError):
+    """The event loop did not complete the workload.
+
+    ``reason`` is ``"watchdog"`` (the step-count budget — see
+    ``SimParams.max_steps`` — was exhausted: a hung loop became this
+    diagnosable error instead of spinning forever) or ``"stranded"``
+    (the loop drained with tasks left unexecuted — work was lost, e.g.
+    by a fault model no thread survived to clean up after).
+    ``scheduler``, ``last_t`` (last event time), ``steps``, and the
+    optional sweep ``cell`` label identify the offending run.
+    """
+
+    def __init__(self, reason: str, scheduler: str, last_t: float,
+                 steps: int, executed: int, tasks: int,
+                 cell: "str | None" = None):
+        self.reason = reason
+        self.scheduler = scheduler
+        self.last_t = last_t
+        self.steps = steps
+        self.executed = executed
+        self.tasks = tasks
+        self.cell = cell
+        where = f"{cell}: " if cell else ""
+        if reason == "watchdog":
+            msg = (f"{where}simulation stalled under scheduler "
+                   f"{scheduler!r}: step watchdog fired after {steps} "
+                   f"events at t={last_t:.6g} "
+                   f"({executed}/{tasks} tasks executed)")
+        else:
+            msg = (f"{where}simulation under scheduler {scheduler!r} "
+                   f"drained with stranded work: {executed}/{tasks} "
+                   f"tasks executed, last event t={last_t:.6g}")
+        super().__init__(msg)
+
+    def with_cell(self, cell: str) -> "SimStalled":
+        """A copy naming the sweep cell the stall occurred in."""
+        return SimStalled(self.reason, self.scheduler, self.last_t,
+                          self.steps, self.executed, self.tasks, cell)
 
 
 @dataclasses.dataclass
@@ -168,6 +210,10 @@ class SimParams:
     wake_latency: float = 0.05      # parked thread wake-up latency
     qop_time: float = 0.05          # local task-pool push/pop cost
     cache_refill: float = 4.0       # work units lost per thread migration
+    # event-loop watchdog budget; <= 0 sizes it automatically from the
+    # workload (generous — legitimate runs never trip it). A hung loop
+    # raises SimStalled instead of spinning forever.
+    max_steps: int = 0
 
 
 @dataclasses.dataclass
@@ -180,6 +226,10 @@ class SimResult:
     failed_probes: int
     remote_work_fraction: float  # share of exec time that was NUMA penalty
     queue_wait: float            # total time spent waiting on the bf lock
+    # ---- fault accounting (all zero on fault-free runs) ----
+    reclaimed: int = 0           # tasks made re-stealable by offline threads
+    reexec: int = 0              # executions aborted mid-run and re-executed
+    fault_lost: float = 0.0      # partial work discarded by preemption/failure
     # which engine actually ran ('c' or 'py'); excluded from equality so
     # cross-engine parity checks compare metrics only.
     engine: str = dataclasses.field(default="", compare=False)
@@ -285,7 +335,20 @@ def _select_engine() -> str:
                 f"{_csim.load_error}")
         engine = "c"
     elif mode == "auto":
-        engine = "c" if _csim.load() is not None else "py"
+        if _csim.load() is not None:
+            engine = "c"
+        else:
+            # graceful degradation: no compiler / failed build falls
+            # back to the (bit-identical, slower) Python engine. Warn
+            # once — the choice is cached until the env var changes or
+            # reset_engine_cache() is called.
+            warnings.warn(
+                "C simulation kernel unavailable "
+                f"({_csim.load_error}); falling back to the pure-Python "
+                "engine (identical results, ~100x slower). Install a C "
+                "compiler and call reset_engine_cache() to retry.",
+                RuntimeWarning, stacklevel=3)
+            engine = "py"
     else:
         raise ValueError(
             f"REPRO_SIM_ENGINE={mode!r}: expected 'auto', 'c', or 'py'")
@@ -330,6 +393,18 @@ def _prepare_ctx(ectx: ExecContext,
         wake_latency=p.wake_latency, qop_time=p.qop_time,
         cache_refill=p.cache_refill,
     )
+    # fault plan: compiled (and cached on the topology) per (specs,
+    # binding, seed) from a dedicated RNG stream — the engine rng below
+    # is untouched, keeping fault-free runs golden-exact.
+    faults = getattr(ectx, "faults", ())
+    fplan = compile_fault_plan(faults, topo, cores, seed) if faults else None
+    ctx["fault_plan"] = fplan
+    ms = getattr(p, "max_steps", 0)
+    if ms <= 0:
+        nw = fplan.n_windows if fplan is not None else 0
+        ms = 10_000 + 1_000 * len(cores) + 50 * (tbl.n + nw)
+    ctx["max_steps"] = int(ms)
+    ctx["scheduler_name"] = spec.name
     # Fresh per-config stream, seeded exactly as the seed engine did.
     # Victim-plan compilation consumes no draws, so the engine always
     # starts from RandomState(seed)'s initial state.
@@ -339,6 +414,12 @@ def _prepare_ctx(ectx: ExecContext,
 
 def _finish_result(ctx: dict, out: dict, serial: float,
                    engine: str) -> SimResult:
+    status = out.get("status", 0)
+    if status:
+        raise SimStalled("watchdog" if status == 1 else "stranded",
+                         ctx.get("scheduler_name", "?"),
+                         out.get("last_t", 0.0), out.get("steps", 0),
+                         out.get("executed", 0), ctx["table"].n)
     makespan = out["makespan"]
     rf = out["remote"] / max(out["total_exec"], 1e-12)
     return SimResult(
@@ -350,6 +431,9 @@ def _finish_result(ctx: dict, out: dict, serial: float,
         failed_probes=out["failed"],
         remote_work_fraction=rf,
         queue_wait=out["queue_wait"],
+        reclaimed=out.get("reclaimed", 0),
+        reexec=out.get("reexec", 0),
+        fault_lost=out.get("fault_lost", 0.0),
         engine=engine,
     )
 

@@ -49,10 +49,25 @@ import numpy as np
 
 from . import _csim, _engine_py, policy
 from .context import ExecContext
-from .runtime import (SimParams, SimResult, Workload, _finish_result,
-                      _prepare_ctx, _select_engine, serial_time)
+from .runtime import (SimParams, SimResult, SimStalled, Workload,
+                      _finish_result, _prepare_ctx, _select_engine,
+                      serial_time)
 
-__all__ = ["SweepConfig", "SweepPlan", "run_sweep"]
+__all__ = ["SweepConfig", "SweepPlan", "CellError", "run_sweep"]
+
+
+@dataclasses.dataclass
+class CellError:
+    """A failed sweep cell under ``strict=False``: the grid label of the
+    offending config plus the error it raised. Takes the cell's slot in
+    the result list so the add()-order ↔ result mapping survives."""
+    label: str
+    index: int
+    error: Exception
+
+    def __repr__(self) -> str:
+        return (f"CellError({self.label!r}: "
+                f"{type(self.error).__name__}: {self.error})")
 
 
 @dataclasses.dataclass(frozen=True, eq=False)
@@ -74,6 +89,7 @@ class SweepConfig:
     migration_rate: float = 0.0
     serial_reference: Optional[float] = None
     context: Optional[ExecContext] = None
+    label: Optional[str] = None  # grid-cell display name for errors
 
     def to_context(self) -> ExecContext:
         """The :class:`ExecContext` this cell runs under."""
@@ -133,41 +149,59 @@ class SweepPlan:
         return (f"sweep cell #{len(self.configs)} "
                 f"({workload.name}/{sched}/T={T})")
 
-    def add(self, topo, thread_cores, workload, scheduler,
-            **kwargs) -> SweepConfig:
+    def add(self, topo, thread_cores, workload, scheduler, *,
+            errors: "list | None" = None, **kwargs) -> "SweepConfig | None":
         """Append one cell from ``simulate()``-style arguments.
 
         Validates eagerly: a bad scheduler name, core id, or data node
         raises here — naming this grid cell — not mid-batch in the
-        engine.
+        engine. Pass ``errors=[...]`` to *collect* the failure message
+        instead of raising (the cell is skipped, ``None`` returned) —
+        grid expansions use this to report every offending cell in one
+        error instead of failing fast on the first.
         """
         cfg = SweepConfig(topo, tuple(int(c) for c in thread_cores),
                           workload, scheduler, **kwargs)
-        cfg.validate(self._cell_name(workload, scheduler,
-                                     len(cfg.thread_cores)))
+        cell = cfg.label or self._cell_name(workload, scheduler,
+                                            len(cfg.thread_cores))
+        try:
+            cfg.validate(cell)
+        except ValueError as e:
+            if errors is None:
+                raise
+            errors.append(str(e))
+            return None
         self.configs.append(cfg)
         return cfg
 
     def add_context(self, context: ExecContext, workload, scheduler, *,
                     seed: int = 0,
-                    serial_reference: Optional[float] = None) -> SweepConfig:
+                    serial_reference: Optional[float] = None,
+                    label: Optional[str] = None,
+                    errors: "list | None" = None) -> "SweepConfig | None":
         """Append one cell running under a compiled :class:`ExecContext`.
 
         Only the scheduler needs checking here — the context itself was
-        validated when :meth:`ExecContext.compile` lowered it.
+        validated when :meth:`ExecContext.compile` lowered it. With
+        ``errors=[...]`` a failure is collected instead of raised and
+        the cell skipped (see :meth:`add`).
         """
         try:
             policy.get_spec(scheduler)
         except ValueError as e:
-            cell = self._cell_name(workload, scheduler, context.threads)
-            raise ValueError(f"{cell}: {e}") from None
+            cell = label or self._cell_name(workload, scheduler,
+                                            context.threads)
+            if errors is None:
+                raise ValueError(f"{cell}: {e}") from None
+            errors.append(f"{cell}: {e}")
+            return None
         cfg = SweepConfig(context.topo, context.thread_cores, workload,
                           scheduler, params=context.params, seed=seed,
                           root_data_nodes=context.root_data_nodes,
                           runtime_data_node=context.runtime_data_node,
                           migration_rate=context.migration_rate,
                           serial_reference=serial_reference,
-                          context=context)
+                          context=context, label=label)
         self.configs.append(cfg)
         return cfg
 
@@ -177,31 +211,65 @@ class SweepPlan:
     def __iter__(self):
         return iter(self.configs)
 
-    def run(self) -> list[SimResult]:
-        return run_sweep(self)
+    def run(self, strict: bool = True) -> "list[SimResult | CellError]":
+        return run_sweep(self, strict=strict)
 
 
-def run_sweep(plan: "SweepPlan | Sequence[SweepConfig]") -> list[SimResult]:
-    """Run every config in ``plan``; returns results in config order."""
+def _cell_label(cfg: SweepConfig, i: int) -> str:
+    if cfg.label:
+        return cfg.label
+    sched = cfg.scheduler.name if hasattr(cfg.scheduler, "name") \
+        else cfg.scheduler
+    return (f"sweep cell #{i} ({cfg.workload.name}/{sched}/"
+            f"T={len(cfg.thread_cores)})")
+
+
+def run_sweep(plan: "SweepPlan | Sequence[SweepConfig]",
+              strict: bool = True) -> "list[SimResult | CellError]":
+    """Run every config in ``plan``; returns results in config order.
+
+    Per-cell error isolation: under ``strict=False`` a failing cell —
+    bad config lowering, engine failure, or a :class:`SimStalled`
+    watchdog trip — becomes a :class:`CellError` naming its grid label
+    in that cell's result slot, and the rest of the batch still runs.
+    Under ``strict=True`` (default) the first failure raises, with the
+    cell label attached (``SimStalled.cell`` for stalls).
+    """
     configs = list(plan.configs if isinstance(plan, SweepPlan) else plan)
     if not configs:
         return []
     engine = _select_engine()
-    ctxs, serials = [], []
-    for cfg in configs:
-        spec = policy.get_spec(cfg.scheduler)
-        ectx = cfg.to_context()
-        ctx = _prepare_ctx(ectx, cfg.workload, spec, cfg.seed)
-        ctxs.append(ctx)
-        if cfg.serial_reference is not None:
-            serials.append(cfg.serial_reference)
-        else:
-            serials.append(serial_time(ectx.topo, cfg.workload,
-                                       ectx.thread_cores[0],
-                                       ctx["root_data_nodes"], ectx.params))
+    n = len(configs)
+    results: "list[SimResult | CellError | None]" = [None] * n
+    prepared: list = []          # (index, ctx, serial)
+    for i, cfg in enumerate(configs):
+        try:
+            spec = policy.get_spec(cfg.scheduler)
+            ectx = cfg.to_context()
+            ctx = _prepare_ctx(ectx, cfg.workload, spec, cfg.seed)
+            if cfg.serial_reference is not None:
+                serial = cfg.serial_reference
+            else:
+                serial = serial_time(ectx.topo, cfg.workload,
+                                     ectx.thread_cores[0],
+                                     ctx["root_data_nodes"], ectx.params)
+        except Exception as e:
+            if strict:
+                raise
+            results[i] = CellError(_cell_label(cfg, i), i, e)
+            continue
+        prepared.append((i, ctx, serial))
+
     if engine == "c":
-        outs = _csim.run_batch(ctxs)
+        outs = _csim.run_batch([ctx for _, ctx, _ in prepared])
     else:
-        outs = [_engine_py.run(ctx) for ctx in ctxs]
-    return [_finish_result(ctx, out, serial, engine)
-            for ctx, out, serial in zip(ctxs, outs, serials)]
+        outs = [_engine_py.run(ctx) for _, ctx, _ in prepared]
+    for (i, ctx, serial), out in zip(prepared, outs):
+        try:
+            results[i] = _finish_result(ctx, out, serial, engine)
+        except SimStalled as e:
+            e = e.with_cell(_cell_label(configs[i], i))
+            if strict:
+                raise e from None
+            results[i] = CellError(e.cell, i, e)
+    return results

@@ -1,0 +1,413 @@
+"""Fault-injection layer tests: spec parsing, plan compilation,
+engine parity under perturbation, hardened-sweep semantics, and
+graceful engine degradation.
+
+The invariants pinned here:
+
+  * fault-free configurations stay bit-exact against the golden
+    fixtures in BOTH engines — the fault hook adds zero behavior when
+    no faults are configured (and even a compiled-but-neutral plan
+    perturbs nothing);
+  * a fault-enabled run is deterministic per (fault spec, seed) and
+    bit-identical between the Python and C engines;
+  * fault accounting (reclaimed / reexec / fault_lost) is consistent;
+  * the step-count watchdog converts hung loops into diagnosable
+    :class:`SimStalled` errors in both engines;
+  * ``run_sweep(strict=False)`` isolates failing cells as
+    :class:`CellError` slots, and ``Machine.grid`` aggregates every
+    invalid cell into one error;
+  * a forced C-build failure degrades to the Python engine with a
+    one-time warning and golden-exact results.
+"""
+
+import json
+import os
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core import topology
+from repro.core.sim import (CellError, Machine, SimParams, SimResult,
+                            SimStalled, SweepPlan, bots, run_context,
+                            reset_engine_cache, simulate)
+from repro.core.sim import _csim, runtime
+from repro.core.sim.faults import (FAULT_STREAM, FaultPlan, FaultSpec,
+                                   compile_fault_plan, get_fault,
+                                   get_faults, register_fault, FAULTS)
+
+GOLD = json.load(open(os.path.join(os.path.dirname(__file__), "data",
+                                   "sim_golden.json")))
+HAVE_C = _csim.load() is not None
+ENGINES = ["py", "c"] if HAVE_C else ["py"]
+TOPO = topology.sunfire_x4600()
+
+
+@pytest.fixture(params=ENGINES)
+def engine(request, monkeypatch):
+    monkeypatch.setenv("REPRO_SIM_ENGINE", request.param)
+    return request.param
+
+
+def _wl():
+    return bots.fft(n=1 << 10, cutoff=8)
+
+
+# ----------------------------------------------------------------------
+# Spec parsing + registry
+# ----------------------------------------------------------------------
+
+def test_parse_straggler():
+    s = get_fault("straggler:0.5")
+    assert s.kind == "straggler" and s.severity == 0.5 and s.cores is None
+    s = get_fault("straggler:1.25@2,5")
+    assert s.cores == (2, 5)
+
+
+def test_parse_preempt():
+    s = get_fault("preempt:3")
+    assert s.kind == "preempt" and s.count == 3.0 and s.duration == 20.0
+    s = get_fault("preempt:2@7.5")
+    assert s.duration == 7.5
+
+
+def test_parse_fail():
+    s = get_fault("fail:2")
+    assert s.kind == "fail" and s.count == 2 and s.at is None
+    s = get_fault("fail:1@30")
+    assert s.at == 30.0
+
+
+@pytest.mark.parametrize("bad", [
+    "straggler", "bogus:1", "straggler:x", "straggler:-1",
+    "preempt:1@-3", "fail:1.5", "fail:1@-2", "straggler:1@a,b",
+])
+def test_parse_rejects(bad):
+    with pytest.raises(ValueError):
+        get_fault(bad)
+
+
+def test_get_faults_normalizes():
+    assert get_faults(None) == ()
+    assert get_faults(()) == ()
+    (one,) = get_faults("fail:1")
+    assert isinstance(one, FaultSpec)
+    two = get_faults(["straggler:0.5", one])
+    assert len(two) == 2 and two[1] is one
+    with pytest.raises(TypeError):
+        get_faults(42)
+
+
+def test_registry_roundtrip():
+    spec = FaultSpec("test-noisy-node", kind="preempt", count=2.0,
+                     duration=5.0)
+    try:
+        register_fault(spec)
+        assert get_fault("test-noisy-node") is spec
+        with pytest.raises(ValueError, match="already registered"):
+            register_fault(spec)
+        register_fault(spec, replace=True)
+    finally:
+        FAULTS.pop("test-noisy-node", None)
+
+
+def test_spec_validation():
+    with pytest.raises(ValueError, match="outside topology"):
+        get_fault("straggler:1@999").validate(TOPO, 8)
+    with pytest.raises(ValueError, match="no survivor"):
+        get_fault("fail:8").validate(TOPO, 8)
+    with pytest.raises(ValueError, match="takes no explicit core"):
+        FaultSpec("x", kind="fail", cores=(1,))
+
+
+# ----------------------------------------------------------------------
+# Plan compilation
+# ----------------------------------------------------------------------
+
+def test_compile_deterministic_and_cached():
+    specs = get_faults(["preempt:2", "straggler:0.5"])
+    cores = tuple(range(8))
+    p1 = compile_fault_plan(specs, TOPO, cores, 3)
+    p2 = compile_fault_plan(specs, TOPO, cores, 3)
+    assert p1 is p2                       # cached on the topology
+    p3 = compile_fault_plan(get_faults(["preempt:2", "straggler:0.5"]),
+                            topology.sunfire_x4600(), cores, 3)
+    np.testing.assert_array_equal(p1.speed, p3.speed)
+    np.testing.assert_array_equal(p1.win_start, p3.win_start)
+    np.testing.assert_array_equal(p1.win_end, p3.win_end)
+    p4 = compile_fault_plan(specs, TOPO, cores, 4)  # new seed, new draws
+    assert (p4.n_windows != p1.n_windows
+            or not np.array_equal(p4.win_start, p1.win_start))
+
+
+def test_compile_windows_merged_sorted():
+    plan = compile_fault_plan(get_faults("preempt:4@30"), TOPO,
+                              tuple(range(8)), 0)
+    for th in range(8):
+        lo, hi = plan.win_off[th], plan.win_off[th + 1]
+        starts = plan.win_start[lo:hi]
+        ends = plan.win_end[lo:hi]
+        assert (starts[1:] > ends[:-1]).all()   # disjoint, sorted
+        assert (ends > starts).all()
+
+
+def test_compile_neutral_plan():
+    plan = compile_fault_plan(get_faults("straggler:0@2"), TOPO,
+                              tuple(range(8)), 0)
+    assert plan.is_neutral and plan.n_windows == 0
+    assert not compile_fault_plan(get_faults("fail:1"), TOPO,
+                                  tuple(range(8)), 0).is_neutral
+
+
+def test_compile_rejects_total_failure():
+    spec = FaultSpec("all-dead", kind="fail", count=4, at=10.0)
+    # two stacked fail specs can cover all threads even though each one
+    # alone passes validate(); the aggregate check must still fire
+    with pytest.raises(ValueError, match="no survivor"):
+        compile_fault_plan((spec, spec), TOPO, tuple(range(4)), 0)
+
+
+def test_fault_stream_disjoint_from_engine_stream():
+    # the fault RNG is a dedicated stream: same seed, different draws
+    a = np.random.RandomState([FAULT_STREAM, 7]).uniform(size=4)
+    b = np.random.RandomState(7).uniform(size=4)
+    assert not np.allclose(a, b)
+
+
+# ----------------------------------------------------------------------
+# Engine behavior under faults
+# ----------------------------------------------------------------------
+
+def _run(machine, wl, sched="dfwsrpt", faults=(), seed=0, T=8, **kw):
+    ctx = machine.context(T, faults=faults, **kw)
+    return run_context(ctx, wl, sched, seed=seed)
+
+
+def test_fault_free_matches_golden(engine):
+    """No faults configured → bit-exact against the golden fixtures."""
+    wl = _wl()
+    for sched in ("bf", "wf", "dfwsrpt"):
+        r = simulate(TOPO, list(range(8)), wl, sched, seed=7)
+        gold = GOLD[f"sunfire/fft_small/{sched}"]
+        for m in ("makespan", "speedup", "steals", "failed_probes",
+                  "remote_work_fraction", "queue_wait", "tasks"):
+            assert getattr(r, m) == gold[m], (sched, m)
+        assert r.reclaimed == 0 and r.reexec == 0 and r.fault_lost == 0.0
+
+
+def test_neutral_plan_is_bit_exact(engine):
+    """A compiled-but-neutral plan takes the fault code path yet changes
+    nothing: the hook itself is free."""
+    m = Machine(TOPO)
+    wl = _wl()
+    base = _run(m, wl, faults=())
+    neutral = _run(m, wl, faults="straggler:0@2")
+    assert base == neutral                # engine field excluded from eq
+
+
+def test_fault_runs_deterministic(engine):
+    m = Machine(TOPO)
+    wl = _wl()
+    for faults in ("straggler:0.5", "preempt:2@15", "fail:1@120"):
+        runs = [_run(m, wl, faults=faults, seed=11) for _ in range(2)]
+        assert runs[0] == runs[1], faults
+
+
+@pytest.mark.skipif(not HAVE_C, reason="C kernel unavailable")
+@pytest.mark.parametrize("sched", ["bf", "cilk", "wf", "dfwspt",
+                                   "dfwsrpt", "dfwshier"])
+@pytest.mark.parametrize("faults", ["straggler:0.75", "preempt:2@15",
+                                    "fail:2@80",
+                                    ("straggler:0.5@1", "preempt:1")])
+def test_engine_parity_under_faults(sched, faults, monkeypatch):
+    """py and C produce bit-identical results under every fault kind,
+    across all schedulers (shared bf queue included)."""
+    m = Machine(TOPO)
+    wl = _wl()
+    out = {}
+    for eng in ("py", "c"):
+        monkeypatch.setenv("REPRO_SIM_ENGINE", eng)
+        out[eng] = _run(m, wl, sched=sched, faults=faults, seed=5)
+    assert out["py"] == out["c"]
+    assert out["py"].engine == "py" and out["c"].engine == "c"
+
+
+@pytest.mark.skipif(not HAVE_C, reason="C kernel unavailable")
+def test_engine_parity_faults_with_migration(monkeypatch):
+    """Migration draws + straggler speed lookups stay in lockstep (a
+    migrated thread can land on — or leave — a slow core)."""
+    m = Machine(TOPO)
+    wl = _wl()
+    out = {}
+    for eng in ("py", "c"):
+        monkeypatch.setenv("REPRO_SIM_ENGINE", eng)
+        out[eng] = _run(m, wl, sched="wf", faults="straggler:1.0",
+                        seed=3, migration_rate=0.15)
+    assert out["py"] == out["c"]
+
+
+def test_fault_accounting(engine):
+    m = Machine(TOPO)
+    wl = _wl()
+    base = _run(m, wl, faults=())
+    master = m.context(8).thread_cores[0]   # the core running the root
+    slow = _run(m, wl, faults=f"straggler:2.0@{master}")
+    # a 3x straggler on the master core must inflate makespan
+    assert slow.makespan > base.makespan
+    assert slow.reclaimed == 0 and slow.fault_lost == 0.0
+    pre = _run(m, wl, faults="preempt:3@25")
+    assert pre.reclaimed >= 0 and pre.reexec >= 0
+    assert pre.fault_lost >= 0.0
+    fail = _run(m, wl, faults="fail:2@60")
+    assert fail.tasks == base.tasks       # every task still executed
+    assert fail.reclaimed >= 1            # the dead threads' work moved
+    assert fail.makespan > 60.0
+
+
+def test_permanent_failure_completes(engine):
+    """Workload completes even when most threads die early: survivors
+    reclaim and re-execute everything."""
+    m = Machine(TOPO)
+    wl = _wl()
+    r = _run(m, wl, faults="fail:6@10", T=8)
+    assert isinstance(r, SimResult)
+    assert r.tasks == _run(m, wl).tasks
+
+
+def test_watchdog_stalls(engine):
+    """An exhausted step budget raises SimStalled naming the scheduler,
+    step count, and last event time — in both engines."""
+    m = Machine(TOPO, params=SimParams(max_steps=10))
+    with pytest.raises(SimStalled) as ei:
+        _run(m, _wl(), sched="wf")
+    e = ei.value
+    assert e.reason == "watchdog" and e.scheduler == "wf"
+    assert e.steps > 10 and e.last_t >= 0.0
+    assert "wf" in str(e) and "watchdog" in str(e)
+
+
+def test_watchdog_auto_budget_passes(engine):
+    """The default (auto) budget is far above any legitimate run."""
+    m = Machine(TOPO)
+    r = _run(m, _wl(), faults="preempt:2")
+    assert r.makespan > 0.0
+
+
+# ----------------------------------------------------------------------
+# Hardened sweep harness
+# ----------------------------------------------------------------------
+
+def test_sweep_strict_false_isolates_cells(engine):
+    wl = _wl()
+    ok = Machine(TOPO)
+    stall = Machine(TOPO, params=SimParams(max_steps=8))
+    plan = SweepPlan()
+    plan.add_context(ok.context(8), wl, "wf")
+    plan.add_context(stall.context(8), wl, "wf", label="doomed-cell")
+    plan.add_context(ok.context(8), wl, "dfwsrpt")
+    res = plan.run(strict=False)
+    assert isinstance(res[0], SimResult)
+    assert isinstance(res[1], CellError) and res[1].index == 1
+    assert res[1].label == "doomed-cell"
+    assert isinstance(res[1].error, SimStalled)
+    assert isinstance(res[2], SimResult)   # batch continued past failure
+
+
+def test_sweep_strict_true_names_cell(engine):
+    wl = _wl()
+    stall = Machine(TOPO, params=SimParams(max_steps=8))
+    plan = SweepPlan()
+    plan.add_context(stall.context(8), wl, "wf", label="doomed-cell")
+    with pytest.raises(SimStalled, match="doomed-cell"):
+        plan.run()
+
+
+def test_sweep_add_collects_errors():
+    wl = _wl()
+    plan = SweepPlan()
+    errors: list = []
+    assert plan.add(TOPO, [0, 1, 999], wl, "wf", errors=errors) is None
+    assert plan.add(TOPO, [0, 1], wl, "nosuch", errors=errors) is None
+    assert plan.add(TOPO, [0, 1], wl, "wf", errors=errors) is not None
+    assert len(errors) == 2 and len(plan) == 1
+    assert any("999" in e for e in errors)
+    assert any("unknown scheduler" in e for e in errors)
+
+
+def test_grid_fault_axis():
+    m = Machine(TOPO)
+    wl = _wl()
+    master = m.context(8).thread_cores[0]
+    slow = f"straggler:1.0@{master}"
+    g = m.grid(workloads=[wl], schedulers=("wf", "dfwsrpt"), threads=8,
+               faults=[None, slow])
+    res = g.run()
+    assert len(res) == 4
+    by_fault = {k.faults: r for k, r in res.items() if k.scheduler == "wf"}
+    assert set(by_fault) == {"none", slow}
+    assert by_fault[slow].makespan > by_fault["none"].makespan
+
+
+def test_grid_aggregated_validation():
+    """Every invalid cell in a grid expansion is reported in ONE error —
+    bad schedulers, malformed fault entries, impossible fault plans."""
+    m = Machine(TOPO)
+    wl = _wl()
+    with pytest.raises(ValueError) as ei:
+        m.grid(workloads=[wl], schedulers=("wf", "nosuch1", "nosuch2"),
+               threads=8, faults=[None, "straggler:-3"])
+    msg = str(ei.value)
+    assert "invalid grid cell" in msg
+    assert "unknown scheduler" in msg
+    assert "nosuch1" in msg and "nosuch2" in msg
+    assert "straggler:-3" in msg
+
+
+def test_grid_run_strict_false():
+    m = Machine(TOPO)
+    stall = Machine(TOPO, params=SimParams(max_steps=8))
+    wl = _wl()
+    g = stall.grid(workloads=[wl], schedulers=("wf",), threads=8)
+    out = g.run(strict=False)
+    (v,) = out.values()
+    assert isinstance(v, CellError)
+    # strict default still raises
+    with pytest.raises(SimStalled):
+        stall.grid(workloads=[wl], schedulers=("wf",), threads=8).run()
+
+
+# ----------------------------------------------------------------------
+# Graceful engine degradation
+# ----------------------------------------------------------------------
+
+def test_c_build_failure_falls_back(monkeypatch):
+    """A broken toolchain degrades to the Python engine: one warning,
+    cached choice, golden-exact results."""
+    def broken_build():
+        raise RuntimeError("forced: no C compiler in this test")
+
+    monkeypatch.setenv("REPRO_SIM_ENGINE", "auto")
+    monkeypatch.setattr(_csim, "_build", broken_build)
+    reset_engine_cache()
+    try:
+        wl = _wl()
+        with pytest.warns(RuntimeWarning, match="falling back"):
+            r = simulate(TOPO, list(range(8)), wl, "wf", seed=7)
+        assert r.engine == "py"
+        gold = GOLD["sunfire/fft_small/wf"]
+        assert r.makespan == gold["makespan"]
+        assert r.steals == gold["steals"]
+        # the choice is cached: no second warning
+        with warnings.catch_warnings(record=True) as caught:
+            warnings.simplefilter("always")
+            r2 = simulate(TOPO, list(range(8)), wl, "wf", seed=7)
+        assert not [w for w in caught
+                    if issubclass(w.category, RuntimeWarning)]
+        assert r2 == r
+        # forcing engine=c under the broken toolchain is a hard error
+        monkeypatch.setenv("REPRO_SIM_ENGINE", "c")
+        reset_engine_cache()
+        with pytest.raises(RuntimeError, match="unavailable"):
+            simulate(TOPO, list(range(8)), wl, "wf", seed=7)
+    finally:
+        reset_engine_cache()              # forget the poisoned attempt
