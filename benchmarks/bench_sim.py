@@ -18,7 +18,12 @@ A separate ``sweep`` section times the batched ``Machine.grid()`` path
 on the fft-medium (5 stock schedulers × 6 thread counts) grid against
 the sum of the equivalent warm per-call ``Machine.run()`` loop — the
 batch amortizes per-config setup and, on the C engine, runs the whole
-grid in one kernel call.
+grid in one kernel call. The ``parallel`` section times the same grid
+across the in-batch worker pool (``workers=1`` vs parallel counts up
+to ``cpu_count``; C pthreads / py fork processes), asserting every
+parallel result bit-identical to serial dispatch; only the
+``workers=1`` wall clock is gated by ``--check`` (as the
+``scale="medium+batch"`` results row).
 
 Engines: ``c`` is the compiled flat-array kernel, ``py`` the pure-Python
 flat reference engine (also run when the C kernel is unavailable). Both
@@ -204,6 +209,60 @@ def bench_sweep(reps: int = 3):
     return out
 
 
+def bench_parallel(reps: int = 3, quick: bool = False):
+    """Batch-throughput rows: the fft-medium 5-sched × 6-T grid
+    dispatched across the in-batch worker pool (C pthreads / py
+    fork processes) at workers=1 vs parallel counts.
+
+    Returns ``(gated, detail)``. ``gated`` is one ``results`` row per
+    engine — ``scale="medium+batch"``, ``warm_s`` = the *workers=1*
+    grid wall clock — so ``--check`` gates only the serial-dispatch
+    row (parallel wall clock on a shared container is noise); its
+    ``speedup`` field records workers=cpu_count vs workers=1. The
+    per-worker-count measurements (wall_s, cells/sec, speedup_vs_1,
+    every result asserted bit-identical to workers=1) go ungated into
+    the ``parallel`` section of ``BENCH_sim.json``.
+    """
+    machine = Machine(topology.sunfire_x4600())
+    wl = bots.fft(n=1 << 15, cutoff=4)
+    thread_counts = (2, 4, 6, 8, 12, 16)
+    ncpu = os.cpu_count() or 1
+    worker_counts = sorted({1, 2, ncpu} if quick else {1, 2, 4, ncpu})
+    gated, detail = [], []
+    for engine in _engines():
+        with _engine_env(engine):
+            grid = machine.grid(workloads=[wl], schedulers=STOCK,
+                                threads=thread_counts)
+            n = len(grid.keys)
+            base_res = grid.run(workers=1)   # warm every shared cache
+            wall = {}
+            for w in worker_counts:
+                best = float("inf")
+                for _ in range(reps):
+                    t0 = time.perf_counter()
+                    res = grid.run(workers=w)
+                    best = min(best, time.perf_counter() - t0)
+                assert res == base_res, \
+                    f"workers={w} diverged from workers=1 ({engine})"
+                wall[w] = best
+                detail.append(dict(
+                    grid="fft-medium x 5 sched x 6 T", configs=n,
+                    engine=engine, workers=w, cpu_count=ncpu,
+                    wall_s=round(best, 6),
+                    cells_per_s=round(n / best, 2),
+                    speedup_vs_1=round(wall[1] / best, 3)))
+            tasks = ensure_table(wl).n
+            gated.append(dict(
+                workload="fft", scale="medium+batch", tasks=tasks,
+                scheduler="batch", engine=engine, threads=16,
+                build_s=0.0, cold_s=0.0, warm_s=round(wall[1], 6),
+                tasks_per_s=round(tasks * n / wall[1], 1),
+                makespan=0.0,
+                speedup=round(wall[1] / wall[max(worker_counts)], 4),
+                steals=0))
+    return gated, detail
+
+
 def check(rows, baseline_path: str, threshold: float = 0.25,
           abs_slack: float = 0.001) -> int:
     """Compare fresh warm_s against the committed baseline; returns the
@@ -270,15 +329,23 @@ def main() -> None:
     rows = []
     print("workload,scale,tasks,scheduler,engine,build_s,cold_s,warm_s,"
           "tasks_per_s,speedup,steals")
+    batch_rows, parallel_rows = bench_parallel(
+        reps=1 if args.quick else 3, quick=args.quick)
     for row in itertools.chain(
             bench(args.quick, args.reps, args.threads),
-            bench_fault_hook(args.reps, args.threads)):
+            bench_fault_hook(args.reps, args.threads),
+            batch_rows):
         rows.append(row)
         print(f"{row['workload']},{row['scale']},{row['tasks']},"
               f"{row['scheduler']},{row['engine']},{row['build_s']:.3f},"
               f"{row['cold_s']:.4f},{row['warm_s']:.4f},"
               f"{row['tasks_per_s']:.0f},{row['speedup']},{row['steals']}",
               flush=True)
+    for p in parallel_rows:
+        print(f"# parallel[{p['engine']}] workers={p['workers']}"
+              f"/{p['cpu_count']}: wall={p['wall_s']:.4f}s "
+              f"cells/s={p['cells_per_s']:.1f} "
+              f"speedup={p['speedup_vs_1']:.2f}x")
 
     if args.check:
         sys.exit(1 if check(rows, args.baseline, args.threshold) else 0)
@@ -297,12 +364,17 @@ def main() -> None:
             c_kernel=_csim.load() is not None,
             c_kernel_error=_csim.load_error,
             timestamp=time.strftime("%Y-%m-%dT%H:%M:%S"),
+            cpu_count=os.cpu_count(),
             note="warm_s is best-of-reps steady state; cold_s includes "
                  "the one-time tree->CSR compile + serial reference. "
                  "sweep rows time the batched SweepPlan path against "
-                 "the per-call loop on the same grid."),
+                 "the per-call loop on the same grid; parallel rows "
+                 "time the same grid across the in-batch worker pool "
+                 "(scale='medium+batch' results rows gate workers=1; "
+                 "parallel speedup is bounded by cpu_count)."),
         results=rows,
-        sweep=sweep_rows)
+        sweep=sweep_rows,
+        parallel=parallel_rows)
     out = args.out or ("BENCH_sim_quick.json" if args.quick
                        else "BENCH_sim.json")
     with open(out, "w") as f:

@@ -16,12 +16,22 @@ node) — and the cartesian product expands straight into one batched
 :class:`~repro.core.sim.SweepPlan` engine call, bit-identical to the
 per-``simulate()`` loop. One common serial reference per benchmark, as
 the paper uses one serial time per benchmark.
+
+The paper's bars are averages over repeated runs on real hardware; the
+figure suites mirror that with a Monte-Carlo seed axis (``SEEDS``
+replicas per cell, expanded inside the same batched call and dispatched
+across the engine worker pool) and report speedups as mean ± CI95.
 """
 
 from __future__ import annotations
 
 from repro.core import topology
 from repro.core.sim import Grid, Machine, SimParams, bots
+
+# Monte-Carlo replicas per grid cell for the figure suites (quick CI
+# smoke trims this); error bars are the CI95 of the speedup mean
+SEEDS = 32
+QUICK_SEEDS = 2
 
 TOPO = topology.sunfire_x4600()
 PARAMS = SimParams()
@@ -71,11 +81,16 @@ def _serial(name: str) -> float:
 
 
 def plan_benchmark(name: str, schedulers=("bf", "cilk", "wf"),
-                   threads=THREADS, seed: int = 0) -> Grid:
-    """The (scheduler × variant × T) grid for one BOTS benchmark."""
+                   threads=THREADS, seed: int = 0, seeds=None) -> Grid:
+    """The (scheduler × variant × T) grid for one BOTS benchmark.
+
+    ``seeds`` (a sequence or int shorthand, see :meth:`Machine.grid`)
+    expands the Monte-Carlo axis; default is the single ``seed``.
+    """
     return MACHINE.grid(
         workloads={name: _workload(name)}, schedulers=schedulers,
-        threads=threads, contexts=variants(name), seeds=(seed,),
+        threads=threads, contexts=variants(name),
+        seeds=(seed,) if seeds is None else seeds,
         serial_reference=_serial(name))
 
 
@@ -87,19 +102,34 @@ def run_benchmark(name: str, schedulers=("bf", "cilk", "wf"),
                                        seed).run().items()}
 
 
+def run_benchmark_stats(name: str, schedulers=("bf", "cilk", "wf"),
+                        threads=THREADS, seeds=SEEDS):
+    """Monte-Carlo form: {(sched, variant, T): CellStats over seeds}."""
+    return {(k.scheduler, k.context, k.threads): s
+            for k, s in plan_benchmark(name, schedulers, threads,
+                                       seeds=seeds).run_stats().items()}
+
+
+def _pm(stat) -> str:
+    """mean ± CI95, the paper-style error bar."""
+    return f"{stat.mean:.2f}±{stat.ci95:.2f}"
+
+
 def fig_5_to_10(report, quick=False):
-    """Thread-allocation study (paper Figs 5–10)."""
+    """Thread-allocation study (paper Figs 5–10), seeds× replicas per
+    bar; speedups reported mean ± CI95, gains on the means."""
     names = ["floorplan", "sparselu", "fft", "strassen", "sort", "nqueens"]
     threads = (4, 16) if quick else THREADS
+    seeds = QUICK_SEEDS if quick else SEEDS
     for name in names:
-        res = run_benchmark(name, threads=threads)
+        res = run_benchmark_stats(name, threads=threads, seeds=seeds)
         for sched in ("bf", "cilk", "wf"):
-            b16 = res[(sched, "base", threads[-1])]
-            n16 = res[(sched, "numa", threads[-1])]
-            gain = (n16 / b16 - 1) * 100
+            b16 = res[(sched, "base", threads[-1])].speedup
+            n16 = res[(sched, "numa", threads[-1])].speedup
+            gain = (n16.mean / b16.mean - 1) * 100
             report(f"bots/{name}/{sched}@{threads[-1]}",
-                   derived=f"base={b16:.2f}x numa={n16:.2f}x "
-                           f"gain={gain:+.1f}%")
+                   derived=f"base={_pm(b16)}x numa={_pm(n16)}x "
+                           f"gain={gain:+.1f}% (n={seeds})")
     return True
 
 
@@ -110,27 +140,28 @@ def fig_13_to_15(report, quick=False):
     along as an extra column next to the paper's three schedulers.
     """
     threads = (16,) if quick else (2, 4, 8, 16)
+    seeds = QUICK_SEEDS if quick else SEEDS
     scheds = ("wf", "dfwspt", "dfwsrpt", "dfwshier")
     names = ("fft", "sort", "strassen")
     # per-benchmark spill sizes → one grid per workload, fused into a
     # single batched engine call
     grid = Grid.concat([
         MACHINE.grid(workloads={name: _workload(name)}, schedulers=scheds,
-                     threads=threads,
+                     threads=threads, seeds=seeds,
                      contexts={"numa": variants(name)["numa"]},
                      serial_reference=_serial(name))
         for name in names])
-    speedups = {(k.workload, k.threads, k.scheduler): r.speedup
-                for k, r in grid.run().items()}
+    speedups = {(k.workload, k.threads, k.scheduler): s.speedup
+                for k, s in grid.run_stats().items()}
     for name in names:
         T = threads[-1]
         sp = {sched: speedups[(name, T, sched)] for sched in scheds}
-        g1 = (sp["dfwspt"] / sp["wf"] - 1) * 100
-        g2 = (sp["dfwsrpt"] / sp["wf"] - 1) * 100
-        g3 = (sp["dfwshier"] / sp["wf"] - 1) * 100
+        g1 = (sp["dfwspt"].mean / sp["wf"].mean - 1) * 100
+        g2 = (sp["dfwsrpt"].mean / sp["wf"].mean - 1) * 100
+        g3 = (sp["dfwshier"].mean / sp["wf"].mean - 1) * 100
         report(f"bots-sched/{name}@{T}",
-               derived=f"wf={sp['wf']:.2f}x "
-                       f"dfwspt={sp['dfwspt']:.2f}x({g1:+.1f}%) "
-                       f"dfwsrpt={sp['dfwsrpt']:.2f}x({g2:+.1f}%) "
-                       f"dfwshier={sp['dfwshier']:.2f}x({g3:+.1f}%)")
+               derived=f"wf={_pm(sp['wf'])}x "
+                       f"dfwspt={_pm(sp['dfwspt'])}x({g1:+.1f}%) "
+                       f"dfwsrpt={_pm(sp['dfwsrpt'])}x({g2:+.1f}%) "
+                       f"dfwshier={_pm(sp['dfwshier'])}x({g3:+.1f}%)")
     return True

@@ -22,7 +22,8 @@ cell (e.g. a stall under an extreme fault) degrades to a reported
 dogfoods the hardened harness it ships with.
 
     PYTHONPATH=src python -m benchmarks.bots_robustness [--quick]
-        [--scale {medium,paper}] [--threads N] [--seeds N] [--out PATH]
+        [--scale {medium,paper}] [--threads N] [--seeds N]
+        [--workers N] [--out PATH]
 
 ``--quick`` (the CI smoke): fft-small only, one seed, a trimmed fault
 axis, and a py↔C engine-parity assertion on every cell.
@@ -71,14 +72,16 @@ def _workload(quick: bool, scale: str):
     return "fft-medium", bots.fft(n=1 << 15, cutoff=4)
 
 
-def sweep(machine: Machine, wl, *, axes, threads: int, seeds, span: float):
+def sweep(machine: Machine, wl, *, axes, threads: int, seeds, span: float,
+          workers=None):
     """Yield one row per (fault kind, intensity, scheduler): mean
     makespan over seeds, inflation vs the faults-off baseline, and the
-    fault accounting."""
+    fault accounting. ``workers`` sets the batch pool size (None:
+    resolve from REPRO_SIM_WORKERS / cpu count)."""
     master = machine.context(threads).thread_cores[0]
     base = machine.grid(workloads=[wl], schedulers=SCHEDULERS,
                         threads=threads, seeds=seeds)
-    base_res = base.run(strict=False)
+    base_res = base.run(strict=False, workers=workers)
     baseline = {}
     for k, r in base_res.items():
         if isinstance(r, CellError):
@@ -91,7 +94,7 @@ def sweep(machine: Machine, wl, *, axes, threads: int, seeds, span: float):
             grid = machine.grid(workloads=[wl], schedulers=SCHEDULERS,
                                 threads=threads, seeds=seeds,
                                 faults=[spec])
-            res = grid.run(strict=False)
+            res = grid.run(strict=False, workers=workers)
             per_sched: dict = {}
             for k, r in res.items():
                 per_sched.setdefault(k.scheduler, []).append(r)
@@ -153,6 +156,9 @@ def main() -> None:
                     default="medium")
     ap.add_argument("--threads", type=int, default=16)
     ap.add_argument("--seeds", type=int, default=3)
+    ap.add_argument("--workers", type=int, default=None,
+                    help="batch worker pool size (default: "
+                         "REPRO_SIM_WORKERS, then cpu count)")
     ap.add_argument("--out", default=None,
                     help="write rows as JSON (default: stdout only)")
     args = ap.parse_args()
@@ -171,7 +177,7 @@ def main() -> None:
     print("kind,intensity,scheduler,makespan,baseline,inflation,"
           "reclaimed,reexec,fault_lost,failed_cells")
     for row in sweep(machine, wl, axes=axes, threads=args.threads,
-                     seeds=seeds, span=span):
+                     seeds=seeds, span=span, workers=args.workers):
         rows.append(row)
         if "makespan" in row:
             print(f"{row['kind']},{row['intensity']},{row['scheduler']},"

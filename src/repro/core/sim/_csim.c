@@ -25,6 +25,13 @@
 #include <stdlib.h>
 #include <string.h>
 
+/* Compiled with -pthread by default; a toolchain without pthread support
+ * is retried with -DCSIM_NO_THREADS, which turns the batch worker pool
+ * into the plain serial loop (sim_threads_available() reports which). */
+#ifndef CSIM_NO_THREADS
+#include <pthread.h>
+#endif
+
 /* ------------------------------------------------------------------ */
 /* MT19937 — numpy legacy RandomState bitstream replica               */
 /* ------------------------------------------------------------------ */
@@ -807,46 +814,139 @@ fail1:
     return rc;
 }
 
-/* Batched sweep entry: run n_cfg prepared configs back to back without
- * re-crossing the Python boundary per run. Every per-config argument
- * arrives as an array of pointers (one per config, same order as the
- * sim_run parameters); outputs land in flat dout (6 per config) and
- * iout (7 per config) blocks. Stops at the first failing config and
- * returns its negative 1-based index; 0 on success.
- */
-int sim_run_batch(int64_t n_cfg,
-                  void **dpar, void **ipar,
-                  void **wp, void **wpo, void **fr, void **fp,
-                  void **fc, void **nc, void **fpw, void **npw,
-                  void **par,
-                  void **core_node, void **node_dist, void **root_dist,
-                  void **cores,
-                  void **vp_group_off, void **vp_unit_off,
-                  void **vp_victim_off, void **vp_victims,
-                  void **fspeed, void **fwoff,
-                  void **fwstart, void **fwend,
-                  double *dout, int64_t *iout)
+/* ------------------------------------------------------------------ */
+/* Batched sweep entry — multi-threaded cell dispatch                 */
+/* ------------------------------------------------------------------ */
+
+/* Every per-config argument arrives as an array of pointers (one per
+ * config, same order as the sim_run parameters). Workers pull cell
+ * indices from an atomic counter; each sim_run call is self-contained
+ * (private heap/queues/rng on the worker's stack+heap, no globals) and
+ * writes to its own dout/iout/rc slot, so results are ordered and
+ * bit-identical to the serial loop regardless of worker count. */
+
+typedef struct {
+    int64_t n_cfg;
+    void **a[23];        /* the 23 per-config pointer tables, in order */
+    double *dout;        /* 6 slots per config */
+    int64_t *iout;       /* 7 slots per config */
+    int64_t *rc;         /* per-config sim_run return code */
+    volatile int64_t next;
+} batch_t;
+
+static void batch_run_one(batch_t *b, int64_t i)
 {
-    for (int64_t i = 0; i < n_cfg; i++) {
-        int rc = sim_run(
-            (const double *)dpar[i], (const int64_t *)ipar[i],
-            (const double *)wp[i], (const double *)wpo[i],
-            (const double *)fr[i], (const double *)fp[i],
-            (const int64_t *)fc[i], (const int64_t *)nc[i],
-            (const int64_t *)fpw[i], (const int64_t *)npw[i],
-            (const int64_t *)par[i],
-            (const int64_t *)core_node[i], (const int64_t *)node_dist[i],
-            (const double *)root_dist[i],
-            (int64_t *)cores[i],
-            (const int64_t *)vp_group_off[i], (const int64_t *)vp_unit_off[i],
-            (const int64_t *)vp_victim_off[i], (const int64_t *)vp_victims[i],
-            (const double *)fspeed[i], (const int64_t *)fwoff[i],
-            (const double *)fwstart[i], (const double *)fwend[i],
-            dout + 6 * i, iout + 7 * i);
-        if (rc != 0)
-            return (int)-(i + 1);
+    void **const *a = b->a;
+    b->rc[i] = (int64_t)sim_run(
+        (const double *)a[0][i], (const int64_t *)a[1][i],
+        (const double *)a[2][i], (const double *)a[3][i],
+        (const double *)a[4][i], (const double *)a[5][i],
+        (const int64_t *)a[6][i], (const int64_t *)a[7][i],
+        (const int64_t *)a[8][i], (const int64_t *)a[9][i],
+        (const int64_t *)a[10][i],
+        (const int64_t *)a[11][i], (const int64_t *)a[12][i],
+        (const double *)a[13][i],
+        (int64_t *)a[14][i],
+        (const int64_t *)a[15][i], (const int64_t *)a[16][i],
+        (const int64_t *)a[17][i], (const int64_t *)a[18][i],
+        (const double *)a[19][i], (const int64_t *)a[20][i],
+        (const double *)a[21][i], (const double *)a[22][i],
+        b->dout + 6 * i, b->iout + 7 * i);
+}
+
+#ifndef CSIM_NO_THREADS
+static void *batch_worker(void *arg)
+{
+    batch_t *b = (batch_t *)arg;
+    for (;;) {
+        int64_t i = __sync_fetch_and_add(&b->next, 1);
+        if (i >= b->n_cfg)
+            break;
+        batch_run_one(b, i);
     }
+    return NULL;
+}
+#endif
+
+/* 1 when the library was built with the pthread worker pool. */
+int sim_threads_available(void)
+{
+#ifdef CSIM_NO_THREADS
     return 0;
+#else
+    return 1;
+#endif
+}
+
+/* Run n_cfg prepared configs on n_workers threads (n_workers <= 1, a
+ * single config, or a -DCSIM_NO_THREADS build: the serial loop, exactly
+ * the pre-pool code path). rc_out[i] receives each config's sim_run
+ * return code (0 ok, negative = allocation failure); failing configs do
+ * not stop the rest of the batch. Returns the number of failed configs.
+ */
+int64_t sim_run_batch(int64_t n_cfg, int64_t n_workers,
+                      void **dpar, void **ipar,
+                      void **wp, void **wpo, void **fr, void **fp,
+                      void **fc, void **nc, void **fpw, void **npw,
+                      void **par,
+                      void **core_node, void **node_dist, void **root_dist,
+                      void **cores,
+                      void **vp_group_off, void **vp_unit_off,
+                      void **vp_victim_off, void **vp_victims,
+                      void **fspeed, void **fwoff,
+                      void **fwstart, void **fwend,
+                      double *dout, int64_t *iout, int64_t *rc_out)
+{
+    batch_t b;
+    b.n_cfg = n_cfg;
+    b.a[0] = dpar; b.a[1] = ipar; b.a[2] = wp; b.a[3] = wpo;
+    b.a[4] = fr; b.a[5] = fp; b.a[6] = fc; b.a[7] = nc;
+    b.a[8] = fpw; b.a[9] = npw; b.a[10] = par;
+    b.a[11] = core_node; b.a[12] = node_dist; b.a[13] = root_dist;
+    b.a[14] = cores;
+    b.a[15] = vp_group_off; b.a[16] = vp_unit_off;
+    b.a[17] = vp_victim_off; b.a[18] = vp_victims;
+    b.a[19] = fspeed; b.a[20] = fwoff;
+    b.a[21] = fwstart; b.a[22] = fwend;
+    b.dout = dout;
+    b.iout = iout;
+    b.rc = rc_out;
+    b.next = 0;
+
+    if (n_workers > n_cfg)
+        n_workers = n_cfg;
+#ifndef CSIM_NO_THREADS
+    if (n_workers > 1) {
+        if (n_workers > 1024)
+            n_workers = 1024;
+        pthread_t *tids = (pthread_t *)malloc((size_t)(n_workers - 1)
+                                              * sizeof(pthread_t));
+        int64_t spawned = 0;
+        if (tids) {
+            for (int64_t k = 0; k < n_workers - 1; k++)
+                if (pthread_create(&tids[spawned], NULL,
+                                   batch_worker, &b) == 0)
+                    spawned++;
+        }
+        /* the calling thread is worker 0; a partially (or fully)
+         * failed spawn just means fewer helpers — the atomic counter
+         * still drains every cell */
+        batch_worker(&b);
+        for (int64_t k = 0; k < spawned; k++)
+            pthread_join(tids[k], NULL);
+        free(tids);
+    } else
+#endif
+    {
+        for (int64_t i = 0; i < n_cfg; i++)
+            batch_run_one(&b, i);
+    }
+
+    int64_t nfail = 0;
+    for (int64_t i = 0; i < n_cfg; i++)
+        if (rc_out[i] != 0)
+            nfail++;
+    return nfail;
 }
 
 /* ------------------------------------------------------------------ */

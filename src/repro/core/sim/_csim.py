@@ -18,6 +18,7 @@ import os
 import shutil
 import subprocess
 import tempfile
+import warnings
 
 import numpy as np
 
@@ -28,13 +29,22 @@ _lib = None
 _load_attempted = False
 load_error: str | None = None
 
+# True once loaded with the pthread worker pool compiled in; a toolchain
+# without pthread support falls back to a -DCSIM_NO_THREADS build and
+# run_batch degrades to workers=1 with a one-time warning.
+threads_supported = False
+_warned_no_threads = False
+
 
 def reset() -> None:
     """Forget a previous load attempt (e.g. the toolchain changed)."""
     global _lib, _load_attempted, load_error
+    global threads_supported, _warned_no_threads
     _lib = None
     _load_attempted = False
     load_error = None
+    threads_supported = False
+    _warned_no_threads = False
 
 _f64p = np.ctypeslib.ndpointer(np.float64, flags="C_CONTIGUOUS")
 _i64p = np.ctypeslib.ndpointer(np.int64, flags="C_CONTIGUOUS")
@@ -47,10 +57,8 @@ def _cache_dir() -> str:
     return os.path.join(base, "repro-sim")
 
 
-def _build() -> str:
-    with open(_SRC, "rb") as f:
-        src = f.read()
-    tag = hashlib.sha1(src + " ".join(_CFLAGS).encode()).hexdigest()[:16]
+def _build_one(flags: list[str], src: bytes) -> str:
+    tag = hashlib.sha1(src + " ".join(flags).encode()).hexdigest()[:16]
     out = os.path.join(_cache_dir(), f"csim_{tag}.so")
     if os.path.exists(out):
         return out
@@ -61,7 +69,7 @@ def _build() -> str:
     fd, tmp = tempfile.mkstemp(suffix=".so", dir=_cache_dir())
     os.close(fd)
     try:
-        subprocess.run([cc, *_CFLAGS, _SRC, "-o", tmp],
+        subprocess.run([cc, *flags, _SRC, "-o", tmp],
                        check=True, capture_output=True, timeout=120)
         os.replace(tmp, out)  # atomic: concurrent builders race safely
     finally:
@@ -70,17 +78,33 @@ def _build() -> str:
     return out
 
 
+def _build() -> tuple[str, bool]:
+    """Compile the kernel; returns (path, threaded).
+
+    Tries the pthread worker-pool build first; a toolchain that rejects
+    ``-pthread`` gets a ``-DCSIM_NO_THREADS`` build (serial batch loop,
+    identical results) instead.
+    """
+    with open(_SRC, "rb") as f:
+        src = f.read()
+    try:
+        return _build_one(_CFLAGS + ["-pthread"], src), True
+    except subprocess.CalledProcessError:
+        return _build_one(_CFLAGS + ["-DCSIM_NO_THREADS"], src), False
+
+
 _uptr = np.ctypeslib.ndpointer(np.uintp, flags="C_CONTIGUOUS")
 
 
 def load():
     """Returns the loaded library or None (with load_error set)."""
-    global _lib, _load_attempted, load_error
+    global _lib, _load_attempted, load_error, threads_supported
     if _load_attempted:
         return _lib
     _load_attempted = True
     try:
-        lib = ct.CDLL(_build())
+        path, threaded = _build()
+        lib = ct.CDLL(path)
         lib.sim_run.restype = ct.c_int
         lib.sim_run.argtypes = [
             _f64p, _i64p,                     # dpar, ipar
@@ -92,10 +116,14 @@ def load():
             _f64p, _i64p, _f64p, _f64p,       # fault plan (speed/off/start/end)
             _f64p, _i64p,                     # dout, iout
         ]
-        lib.sim_run_batch.restype = ct.c_int
-        # n_cfg, then 23 arrays of per-config pointers, then flat outputs
+        lib.sim_run_batch.restype = ct.c_int64
+        # n_cfg, n_workers, 23 arrays of per-config pointers, then flat
+        # outputs + per-config return codes
         lib.sim_run_batch.argtypes = (
-            [ct.c_int64] + [_uptr] * 23 + [_f64p, _i64p])
+            [ct.c_int64, ct.c_int64] + [_uptr] * 23
+            + [_f64p, _i64p, _i64p])
+        lib.sim_threads_available.restype = ct.c_int
+        lib.sim_threads_available.argtypes = []
         lib.mt_selftest.restype = None
         lib.mt_selftest.argtypes = [ct.c_uint32, ct.c_int64, _u32p]
         lib.shuffle_selftest.restype = None
@@ -103,6 +131,7 @@ def load():
                                          ct.c_int64, _i64p]
         lib.set_selftest.restype = ct.c_int64
         lib.set_selftest.argtypes = [ct.c_int64, _i64p, _i64p]
+        threads_supported = threaded and bool(lib.sim_threads_available())
         _lib = lib
     except Exception as e:  # no compiler, sandboxed cc, bad toolchain, ...
         load_error = f"{type(e).__name__}: {e}"
@@ -179,17 +208,33 @@ def run(ctx) -> dict:
     return _unpack(dout, iout)
 
 
-def run_batch(ctxs) -> list[dict]:
+def run_batch(ctxs, workers: int = 1) -> list:
     """Run many prepared contexts in one kernel call.
 
     The whole grid executes inside ``sim_run_batch`` — no Python ↔ C
-    crossing per config. Per-config argument arrays are packed as
-    pointer tables; everything stays referenced until the call returns.
+    crossing per config — dispatched across ``workers`` pthreads pulling
+    cells from an atomic counter. Each cell writes its own output slot,
+    so results are ordered and bit-identical to ``workers=1`` at any
+    worker count. Per-config argument arrays are packed as pointer
+    tables; everything stays referenced until the call returns.
+
+    Returns one entry per context: the unpacked result dict, or an
+    exception object for a cell whose kernel run failed (the rest of
+    the batch still completes — callers map these to ``CellError``).
     """
+    global _warned_no_threads
     lib = load()
     assert lib is not None
     if not ctxs:
         return []
+    if workers > 1 and not threads_supported:
+        if not _warned_no_threads:
+            _warned_no_threads = True
+            warnings.warn(
+                "C sim kernel was built without pthread support; "
+                "running batch with workers=1",
+                RuntimeWarning, stacklevel=2)
+        workers = 1
     n = len(ctxs)
     marshalled = [_marshal(ctx) for ctx in ctxs]
     # 23 pointer tables, one per kernel parameter position
@@ -200,11 +245,19 @@ def run_batch(ctxs) -> list[dict]:
     ]
     dout = np.zeros(6 * n, dtype=np.float64)
     iout = np.zeros(7 * n, dtype=np.int64)
-    rc = lib.sim_run_batch(n, *ptr_tables, dout, iout)
-    if rc != 0:
-        raise MemoryError(f"C sim kernel failed on batch config "
-                          f"{-rc - 1} of {n}")
+    rcs = np.zeros(n, dtype=np.int64)
+    nfail = lib.sim_run_batch(n, max(int(workers), 1), *ptr_tables,
+                              dout, iout, rcs)
     for ctx, (_, cores) in zip(ctxs, marshalled):
         ctx["cores"][:] = [int(c) for c in cores]
-    return [_unpack(dout[6 * i:6 * i + 6], iout[7 * i:7 * i + 7])
-            for i in range(n)]
+    out = []
+    for i in range(n):
+        if rcs[i] != 0:
+            out.append(MemoryError(
+                f"C sim kernel failed with code {int(rcs[i])} "
+                f"on batch config {i} of {n}"))
+        else:
+            out.append(_unpack(dout[6 * i:6 * i + 6],
+                               iout[7 * i:7 * i + 7]))
+    assert nfail == sum(isinstance(o, Exception) for o in out)
+    return out

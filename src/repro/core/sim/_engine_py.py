@@ -47,9 +47,11 @@ engine.
 from __future__ import annotations
 
 import heapq
+import pickle
+import warnings
 from collections import deque
 
-__all__ = ["run"]
+__all__ = ["run", "run_batch"]
 
 
 def run(ctx) -> dict:
@@ -430,3 +432,77 @@ def run(ctx) -> dict:
                 queue_wait=sl_waited, steals=steals, failed=failed,
                 reclaimed=reclaimed, reexec=reexec, fault_lost=fault_lost,
                 executed=executed, steps=steps, status=status, last_t=last_t)
+
+
+# ------------------------------------------------------------------ #
+# batched execution: multiprocessing pool over cells                 #
+# ------------------------------------------------------------------ #
+#
+# The prepared contexts (compiled TaskTables, victim plans, FaultPlans
+# — all the heavy flat arrays) are built once in the parent and shared
+# with workers by setting the module global below *before* forking the
+# pool: fork-children inherit the whole list, so nothing but a cell
+# index travels to a worker and nothing but a small result dict (or a
+# picklable exception) travels back. A failed cell is returned as the
+# exception object, not raised, so one bad cell cannot poison the
+# batch; callers map these to CellError.
+
+_MP_CTXS: list | None = None
+_warned_no_pool = False
+
+
+def _picklable(exc: BaseException) -> BaseException:
+    """Exceptions must survive the trip back through the pool's result
+    pickle; anything that doesn't round-trip is flattened to a
+    RuntimeError carrying the original type and message."""
+    try:
+        pickle.loads(pickle.dumps(exc))
+        return exc
+    except Exception:
+        return RuntimeError(f"{type(exc).__name__}: {exc}")
+
+
+def _mp_cell(i: int):
+    try:
+        return ("ok", run(_MP_CTXS[i]))
+    except Exception as e:           # noqa: BLE001 — isolate the cell
+        return ("err", _picklable(e))
+
+
+def run_batch(ctxs, workers: int = 1) -> list:
+    """Run many prepared contexts, optionally across a process pool.
+
+    Returns one entry per context: the result dict, or the exception the
+    cell raised (callers map these to ``CellError``). Results are keyed
+    by cell index, so output order — and every result bit — is identical
+    to the serial loop at any worker count. When the pool cannot start
+    (no fork support, sandboxed env) the batch degrades to ``workers=1``
+    with a one-time warning, mirroring the C→py engine fallback.
+    """
+    global _MP_CTXS, _warned_no_pool
+    ctxs = list(ctxs)
+    if workers > 1 and len(ctxs) > 1:
+        try:
+            import multiprocessing as mp
+            mpctx = mp.get_context("fork")
+            _MP_CTXS = ctxs     # set BEFORE fork: children inherit it
+            try:
+                with mpctx.Pool(min(workers, len(ctxs))) as pool:
+                    tagged = pool.map(_mp_cell, range(len(ctxs)))
+                return [out for _, out in tagged]
+            finally:
+                _MP_CTXS = None
+        except (ImportError, ValueError, OSError) as e:
+            if not _warned_no_pool:
+                _warned_no_pool = True
+                warnings.warn(
+                    f"multiprocessing pool unavailable ({e}); "
+                    "running batch with workers=1",
+                    RuntimeWarning, stacklevel=2)
+    out = []
+    for ctx in ctxs:
+        try:
+            out.append(run(ctx))
+        except Exception as e:       # noqa: BLE001 — isolate the cell
+            out.append(e)
+    return out

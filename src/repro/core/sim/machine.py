@@ -40,7 +40,7 @@ from .context import ExecContext
 from .faults import get_faults
 from .runtime import SimParams, SimResult, Workload, run_context
 from .runtime import serial_time as _serial_time
-from .sweep import SweepPlan
+from .sweep import CellStats, SweepPlan, aggregate
 
 __all__ = ["Machine", "Grid", "GridKey"]
 
@@ -87,11 +87,13 @@ class Grid:
             merged.keys.extend(g.keys)
         return merged
 
-    def run(self, strict: bool = True) -> "dict[GridKey, SimResult]":
+    def run(self, strict: bool = True,
+            workers: "int | None" = None) -> "dict[GridKey, SimResult]":
         """Run the whole grid in one batched engine call.
 
         Returns ``{GridKey: SimResult}`` in cell order — bit-identical,
-        cell for cell, to looping ``simulate()`` over the same grid.
+        cell for cell, to looping ``simulate()`` over the same grid,
+        at any ``workers`` count (see :func:`~.sweep.run_sweep`).
         Under ``strict=False`` a failing cell maps to a
         :class:`~.sweep.CellError` instead of aborting the batch.
         """
@@ -102,7 +104,26 @@ class Grid:
                 f"grid has duplicate cells (e.g. {dup}); the result dict "
                 "would silently drop them — dedupe schedulers/seeds or "
                 "the grids passed to Grid.concat")
-        return dict(zip(self.keys, self.plan.run(strict=strict)))
+        return dict(zip(self.keys,
+                        self.plan.run(strict=strict, workers=workers)))
+
+    def run_stats(self, strict: bool = True,
+                  workers: "int | None" = None
+                  ) -> "dict[GridKey, CellStats]":
+        """Run the grid and fold the Monte-Carlo seed axis into stats.
+
+        Replicas — cells identical up to ``seed`` — aggregate into one
+        :class:`~.sweep.CellStats` (mean/std/min/max/CI95 per metric,
+        raw per-seed results in ``.results``), keyed by the cell's
+        :class:`GridKey` with ``seed=None``. Under ``strict=False``
+        failed replicas land in ``.errors`` and the stats cover the
+        survivors.
+        """
+        res = self.run(strict=strict, workers=workers)
+        groups: "dict[GridKey, list]" = {}
+        for k, r in res.items():
+            groups.setdefault(k._replace(seed=None), []).append(r)
+        return {k: aggregate(rs) for k, rs in groups.items()}
 
 
 class Machine:
@@ -222,7 +243,9 @@ class Machine:
             A variant may pin its own ``threads``; that variant then
             emits one set of cells at the pinned count instead of one
             per grid-level count.
-          seeds: simulation seeds.
+          seeds: simulation seeds — a sequence of explicit seeds, or an
+            int ``n`` as Monte-Carlo shorthand for ``range(n)`` (``n``
+            replicas per cell; aggregate with :meth:`Grid.run_stats`).
           runtime_data, migration_rate: defaults for every variant
             (``contexts=`` values override per variant).
           faults: a fault *axis* crossed with everything else — a
@@ -262,8 +285,10 @@ class Machine:
             thread_counts = (threads,)
         else:
             thread_counts = tuple(threads)
+        # Monte-Carlo shorthand: seeds=32 means 32 replicas per cell
+        # (seeds 0..31); pass an explicit sequence for specific seeds.
         if isinstance(seeds, int):
-            seeds = (seeds,)
+            seeds = tuple(range(seeds))
 
         if contexts is None:
             contexts = {}

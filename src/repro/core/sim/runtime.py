@@ -93,8 +93,9 @@ from .table import TaskTable, compile_tree
 
 __all__ = [
     "TaskSpec", "Workload", "SimParams", "SimResult", "SimStalled",
-    "simulate", "run_context", "serial_time", "SCHEDULERS",
-    "SchedulerSpec", "TaskTable", "ensure_table", "reset_engine_cache",
+    "simulate", "run_context", "serial_time", "resolve_workers",
+    "SCHEDULERS", "SchedulerSpec", "TaskTable", "ensure_table",
+    "reset_engine_cache",
 ]
 
 
@@ -214,6 +215,10 @@ class SimParams:
     # workload (generous — legitimate runs never trip it). A hung loop
     # raises SimStalled instead of spinning forever.
     max_steps: int = 0
+    # batch worker count for sweeps (C pthread pool / py process pool);
+    # <= 0 defers to REPRO_SIM_WORKERS, then os.cpu_count(). 1 is the
+    # serial path. Results are bit-identical at any worker count.
+    workers: int = 0
 
 
 @dataclasses.dataclass
@@ -302,6 +307,27 @@ def serial_time(topo: Topology, workload: Workload, core: int,
             extend(range(base, base + kp))
     tbl._serial_cache[key] = total
     return total
+
+
+def resolve_workers(workers: "int | None" = None,
+                    params: "SimParams | None" = None) -> int:
+    """Resolve the batch worker count (always >= 1).
+
+    Precedence: explicit ``workers`` argument > ``SimParams.workers``
+    (when > 0) > the ``REPRO_SIM_WORKERS`` env var > ``os.cpu_count()``.
+    """
+    if workers is not None:
+        return max(int(workers), 1)
+    if params is not None and params.workers > 0:
+        return int(params.workers)
+    env = os.environ.get("REPRO_SIM_WORKERS")
+    if env is not None and env.strip():
+        try:
+            return max(int(env), 1)
+        except ValueError:
+            raise ValueError(
+                f"REPRO_SIM_WORKERS={env!r}: expected an integer") from None
+    return os.cpu_count() or 1
 
 
 # (env value, resolved engine); revalidated only when the variable

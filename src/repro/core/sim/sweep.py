@@ -43,6 +43,7 @@ or, declaratively (one call per paper figure)::
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Optional, Sequence
 
 import numpy as np
@@ -51,9 +52,10 @@ from . import _csim, _engine_py, policy
 from .context import ExecContext
 from .runtime import (SimParams, SimResult, SimStalled, Workload,
                       _finish_result, _prepare_ctx, _select_engine,
-                      serial_time)
+                      resolve_workers, serial_time)
 
-__all__ = ["SweepConfig", "SweepPlan", "CellError", "run_sweep"]
+__all__ = ["SweepConfig", "SweepPlan", "CellError", "run_sweep",
+           "Stat", "CellStats", "aggregate"]
 
 
 @dataclasses.dataclass
@@ -211,8 +213,9 @@ class SweepPlan:
     def __iter__(self):
         return iter(self.configs)
 
-    def run(self, strict: bool = True) -> "list[SimResult | CellError]":
-        return run_sweep(self, strict=strict)
+    def run(self, strict: bool = True,
+            workers: "int | None" = None) -> "list[SimResult | CellError]":
+        return run_sweep(self, strict=strict, workers=workers)
 
 
 def _cell_label(cfg: SweepConfig, i: int) -> str:
@@ -225,20 +228,33 @@ def _cell_label(cfg: SweepConfig, i: int) -> str:
 
 
 def run_sweep(plan: "SweepPlan | Sequence[SweepConfig]",
-              strict: bool = True) -> "list[SimResult | CellError]":
+              strict: bool = True,
+              workers: "int | None" = None
+              ) -> "list[SimResult | CellError]":
     """Run every config in ``plan``; returns results in config order.
 
+    ``workers`` sets how many cells run concurrently — a pthread pool
+    inside the C kernel, a fork-based process pool around the Python
+    engine. Default (``None``) resolves via :func:`resolve_workers`:
+    the first config's ``SimParams.workers``, then ``REPRO_SIM_WORKERS``,
+    then ``os.cpu_count()``. Each cell runs on its own per-(cell, seed)
+    RNG stream into its own result slot, so results are bit-identical
+    to ``workers=1`` at any worker count.
+
     Per-cell error isolation: under ``strict=False`` a failing cell —
-    bad config lowering, engine failure, or a :class:`SimStalled`
-    watchdog trip — becomes a :class:`CellError` naming its grid label
-    in that cell's result slot, and the rest of the batch still runs.
-    Under ``strict=True`` (default) the first failure raises, with the
-    cell label attached (``SimStalled.cell`` for stalls).
+    bad config lowering, an engine failure inside a C worker or a py
+    subprocess, or a :class:`SimStalled` watchdog trip — becomes a
+    :class:`CellError` naming its grid label in that cell's result
+    slot, and the rest of the batch still runs. Under ``strict=True``
+    (default) the first failure raises, with the cell label attached
+    (``SimStalled.cell`` for stalls).
     """
     configs = list(plan.configs if isinstance(plan, SweepPlan) else plan)
     if not configs:
         return []
     engine = _select_engine()
+    nw = resolve_workers(workers, next(
+        (c.params for c in configs if c.params is not None), None))
     n = len(configs)
     results: "list[SimResult | CellError | None]" = [None] * n
     prepared: list = []          # (index, ctx, serial)
@@ -260,11 +276,14 @@ def run_sweep(plan: "SweepPlan | Sequence[SweepConfig]",
             continue
         prepared.append((i, ctx, serial))
 
-    if engine == "c":
-        outs = _csim.run_batch([ctx for _, ctx, _ in prepared])
-    else:
-        outs = [_engine_py.run(ctx) for _, ctx, _ in prepared]
+    batch = _csim.run_batch if engine == "c" else _engine_py.run_batch
+    outs = batch([ctx for _, ctx, _ in prepared], workers=nw)
     for (i, ctx, serial), out in zip(prepared, outs):
+        if isinstance(out, Exception):
+            if strict:
+                raise out
+            results[i] = CellError(_cell_label(configs[i], i), i, out)
+            continue
         try:
             results[i] = _finish_result(ctx, out, serial, engine)
         except SimStalled as e:
@@ -273,3 +292,76 @@ def run_sweep(plan: "SweepPlan | Sequence[SweepConfig]",
                 raise e from None
             results[i] = CellError(e.cell, i, e)
     return results
+
+
+# ------------------------------------------------------------------ #
+# Monte-Carlo aggregation: per-cell replica statistics               #
+# ------------------------------------------------------------------ #
+
+@dataclasses.dataclass(frozen=True)
+class Stat:
+    """Summary statistics of one metric over Monte-Carlo replicas.
+
+    ``ci95`` is the normal-approximation 95% confidence half-width of
+    the mean, ``1.96 * std / sqrt(n)`` (0 for a single replica); report
+    values as ``mean ± ci95``. ``std`` is the sample standard deviation
+    (ddof=1).
+    """
+    mean: float
+    std: float
+    min: float
+    max: float
+    ci95: float
+
+
+def _stat(xs: Sequence[float]) -> Stat:
+    n = len(xs)
+    if n == 0:
+        nan = float("nan")
+        return Stat(nan, nan, nan, nan, nan)
+    mean = math.fsum(xs) / n
+    if n > 1:
+        var = math.fsum((x - mean) ** 2 for x in xs) / (n - 1)
+        std = math.sqrt(var)
+    else:
+        std = 0.0
+    return Stat(mean=mean, std=std, min=min(xs), max=max(xs),
+                ci95=1.96 * std / math.sqrt(n))
+
+
+_CELLSTAT_METRICS = ("makespan", "speedup", "steals", "failed_probes",
+                     "remote_work_fraction", "queue_wait", "reclaimed",
+                     "reexec", "fault_lost")
+
+
+@dataclasses.dataclass(frozen=True)
+class CellStats:
+    """One grid cell's Monte-Carlo replica results, aggregated.
+
+    Every :class:`~.runtime.SimResult` metric gets a :class:`Stat`
+    (mean/std/min/max/CI95 over the successful replicas); the raw
+    per-seed results stay available in ``results`` (add order) and any
+    failed replicas (``strict=False``) in ``errors``. ``n`` counts the
+    successful replicas the stats are computed over.
+    """
+    n: int
+    makespan: Stat
+    speedup: Stat
+    steals: Stat
+    failed_probes: Stat
+    remote_work_fraction: Stat
+    queue_wait: Stat
+    reclaimed: Stat
+    reexec: Stat
+    fault_lost: Stat
+    results: "tuple[SimResult, ...]" = ()
+    errors: "tuple[CellError, ...]" = ()
+
+
+def aggregate(results: "Sequence[SimResult | CellError]") -> CellStats:
+    """Aggregate one cell's replica results into a :class:`CellStats`."""
+    ok = [r for r in results if isinstance(r, SimResult)]
+    errs = tuple(r for r in results if isinstance(r, CellError))
+    stats = {m: _stat([float(getattr(r, m)) for r in ok])
+             for m in _CELLSTAT_METRICS}
+    return CellStats(n=len(ok), results=tuple(ok), errors=errs, **stats)

@@ -358,6 +358,36 @@ def test_grid_contexts_exclusive_with_bindings_placements():
                bindings=("linear",), contexts={"v": {}})
 
 
+def test_grid_seeds_int_shorthand(engine):
+    """seeds=n is Monte-Carlo shorthand for range(n): n replicas per
+    cell, identical to passing the explicit tuple."""
+    wl = bots.fft(n=1 << 8, cutoff=8)
+    m = Machine(SUNFIRE)
+    g = m.grid(workloads=[wl], schedulers=("wf",), threads=4, seeds=3)
+    assert [k.seed for k in g.keys] == [0, 1, 2]
+    explicit = m.grid(workloads=[wl], schedulers=("wf",), threads=4,
+                      seeds=(0, 1, 2))
+    assert g.keys == explicit.keys
+    assert g.run() == explicit.run()
+
+
+def test_grid_run_stats_exposes_raw_results(engine):
+    wl = bots.fft(n=1 << 8, cutoff=8)
+    m = Machine(SUNFIRE)
+    g = m.grid(workloads=[wl], schedulers=("wf", "bf"), threads=4,
+               seeds=4)
+    raw = g.run()
+    stats = g.run_stats()
+    assert len(stats) == 2
+    for k, cs in stats.items():
+        assert k.seed is None
+        assert cs.n == 4
+        per_seed = [raw[k._replace(seed=s)] for s in range(4)]
+        assert list(cs.results) == per_seed
+        assert cs.makespan.min == min(r.makespan for r in per_seed)
+        assert cs.makespan.max == max(r.makespan for r in per_seed)
+
+
 def test_grid_rejects_duplicate_cells():
     """Colliding GridKeys would be silently collapsed by the result
     dict — run() must refuse instead."""

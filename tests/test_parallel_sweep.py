@@ -1,0 +1,290 @@
+"""Tests for the parallel Monte-Carlo batch engine.
+
+The tentpole contract: a batch dispatched across the worker pool — C
+pthreads inside ``sim_run_batch``, a fork process pool around the py
+engine — is bit-identical per (cell, seed) to serial dispatch at any
+worker count; the seed axis aggregates into exact :class:`CellStats`;
+and a failing cell inside a worker surfaces as the same labeled
+:class:`CellError` as on the serial path.
+"""
+
+import math
+import os
+import pickle
+
+import pytest
+
+from repro.core import topology
+from repro.core.sim import (CellError, CellStats, Machine, SimParams,
+                            SimResult, SimStalled, Stat, aggregate, bots,
+                            reset_engine_cache, resolve_workers)
+from repro.core.sim import _csim, _engine_py
+
+TOPO = topology.sunfire_x4600()
+HAVE_C = _csim.load() is not None
+ENGINES = ["py", "c"] if HAVE_C else ["py"]
+NCPU = os.cpu_count() or 1
+
+
+@pytest.fixture(params=ENGINES)
+def engine(request, monkeypatch):
+    monkeypatch.setenv("REPRO_SIM_ENGINE", request.param)
+    reset_engine_cache()
+    yield request.param
+    reset_engine_cache()
+
+
+def _grid(machine, wl, **kw):
+    """A grid that exercises rng-dependent paths: stealing, migration,
+    and every fault kind, across thread counts and seeds."""
+    kw.setdefault("faults", [None, "straggler:1.0", "preempt:2@50",
+                             "fail:2@100"])
+    return machine.grid(
+        workloads=[wl], schedulers=("wf", "dfwsrpt", "bf"),
+        threads=(4, 16), seeds=3, migration_rate=0.1, **kw)
+
+
+# ----------------------------------------------------------------------
+# determinism: workers ∈ {1, 2, cpu_count} bit-identical per cell
+# ----------------------------------------------------------------------
+
+def test_workers_bit_identical(engine):
+    machine = Machine(TOPO)
+    wl = bots.fft(n=1 << 10, cutoff=8)
+    grid = _grid(machine, wl)
+    base = grid.run(workers=1)
+    assert len(base) == 3 * 2 * 3 * 4
+    for w in sorted({2, 4, NCPU}):
+        res = grid.run(workers=w)
+        assert res == base, f"workers={w} diverged on {engine}"
+
+
+def test_workers_default_resolution(monkeypatch):
+    monkeypatch.delenv("REPRO_SIM_WORKERS", raising=False)
+    assert resolve_workers(8) == 8
+    assert resolve_workers(0) == 1          # explicit floor
+    assert resolve_workers(None, SimParams(workers=6)) == 6
+    monkeypatch.setenv("REPRO_SIM_WORKERS", "5")
+    assert resolve_workers() == 5
+    assert resolve_workers(2) == 2          # explicit beats env
+    assert resolve_workers(None, SimParams(workers=3)) == 3
+    monkeypatch.setenv("REPRO_SIM_WORKERS", "nope")
+    with pytest.raises(ValueError, match="REPRO_SIM_WORKERS"):
+        resolve_workers()
+    monkeypatch.delenv("REPRO_SIM_WORKERS")
+    assert resolve_workers() == (os.cpu_count() or 1)
+
+
+def test_workers_env_applies_to_grid(engine, monkeypatch):
+    machine = Machine(TOPO)
+    wl = bots.fft(n=1 << 10, cutoff=8)
+    grid = machine.grid(workloads=[wl], schedulers=("wf",), threads=16,
+                        seeds=2)
+    base = grid.run(workers=1)
+    monkeypatch.setenv("REPRO_SIM_WORKERS", "2")
+    assert grid.run() == base
+
+
+@pytest.mark.skipif(not HAVE_C, reason="C kernel unavailable")
+def test_c_kernel_reports_thread_support():
+    assert _csim.load() is not None
+    # the default toolchain here built with -pthread; either way the
+    # flag and the exported probe must agree
+    assert _csim.threads_supported == bool(
+        _csim.load().sim_threads_available())
+
+
+# ----------------------------------------------------------------------
+# CellStats aggregation: exact math
+# ----------------------------------------------------------------------
+
+def _res(makespan):
+    return SimResult(makespan=makespan, serial_time=10.0,
+                     speedup=10.0 / makespan, tasks=1, steals=2,
+                     failed_probes=0, remote_work_fraction=0.0,
+                     queue_wait=0.0)
+
+
+def test_cellstats_exact_mean_ci95():
+    cs = aggregate([_res(m) for m in (1.0, 2.0, 3.0, 4.0)])
+    assert isinstance(cs, CellStats)
+    assert cs.n == 4
+    assert cs.makespan.mean == 2.5
+    assert cs.makespan.min == 1.0 and cs.makespan.max == 4.0
+    # sample std: sum((x-2.5)^2) = 5.0, ddof=1 -> sqrt(5/3)
+    assert cs.makespan.std == pytest.approx(math.sqrt(5.0 / 3.0), abs=0,
+                                            rel=1e-15)
+    assert cs.makespan.ci95 == pytest.approx(
+        1.96 * math.sqrt(5.0 / 3.0) / 2.0, rel=1e-15)
+    assert cs.steals.mean == 2.0 and cs.steals.std == 0.0
+    assert len(cs.results) == 4 and cs.errors == ()
+
+
+def test_cellstats_single_and_empty():
+    one = aggregate([_res(5.0)])
+    assert one.n == 1
+    assert one.makespan == Stat(5.0, 0.0, 5.0, 5.0, 0.0)
+    none = aggregate([CellError("cell", 0, ValueError("x"))])
+    assert none.n == 0
+    assert math.isnan(none.makespan.mean)
+    assert len(none.errors) == 1
+
+
+def test_run_stats_groups_by_seedless_key(engine):
+    machine = Machine(TOPO)
+    wl = bots.fft(n=1 << 10, cutoff=8)
+    grid = machine.grid(workloads=[wl], schedulers=("wf", "dfwsrpt"),
+                        threads=16, seeds=4)
+    raw = grid.run()
+    stats = grid.run_stats(workers=2)
+    assert len(stats) == 2
+    for k, cs in stats.items():
+        assert k.seed is None
+        assert cs.n == 4
+        mks = [r.makespan for kk, r in raw.items()
+               if kk._replace(seed=None) == k]
+        assert cs.makespan.mean == pytest.approx(
+            math.fsum(mks) / 4, rel=1e-15)
+        assert [r.makespan for r in cs.results] == mks
+
+
+# ----------------------------------------------------------------------
+# strict=False isolation through the parallel paths
+# ----------------------------------------------------------------------
+
+def test_stall_isolated_at_any_worker_count(engine):
+    machine = Machine(TOPO, SimParams(max_steps=5))
+    wl = bots.fft(n=1 << 10, cutoff=8)
+    grid = machine.grid(workloads=[wl], schedulers=("wf",), threads=16,
+                        seeds=2)
+    for w in (1, 2):
+        res = grid.run(strict=False, workers=w)
+        assert all(isinstance(r, CellError) for r in res.values())
+        err = next(iter(res.values()))
+        assert isinstance(err.error, SimStalled)
+        assert err.label.startswith("grid cell (fft/wf/")
+        with pytest.raises(SimStalled, match="grid cell"):
+            grid.run(strict=True, workers=w)
+
+
+def test_py_pool_isolates_engine_exception(monkeypatch):
+    """A cell raising inside a forked py worker comes back as the same
+    labeled CellError as on the serial path, without poisoning the rest
+    of the batch."""
+    monkeypatch.setenv("REPRO_SIM_ENGINE", "py")
+    reset_engine_cache()
+    orig = _engine_py.run
+
+    def boom(ctx):
+        if ctx["seed"] == 1:
+            raise ValueError("injected failure")
+        return orig(ctx)
+
+    monkeypatch.setattr(_engine_py, "run", boom)
+    machine = Machine(TOPO)
+    wl = bots.fft(n=1 << 10, cutoff=8)
+    grid = machine.grid(workloads=[wl], schedulers=("wf",), threads=16,
+                        seeds=3)
+    for w in (1, 2):   # fork children inherit the monkeypatch
+        res = list(grid.run(strict=False, workers=w).items())
+        assert isinstance(res[0][1], SimResult)
+        assert isinstance(res[2][1], SimResult)
+        k, err = res[1]
+        assert k.seed == 1
+        assert isinstance(err, CellError)
+        assert isinstance(err.error, ValueError)
+        assert "injected failure" in str(err.error)
+        assert "seed=1" in err.label
+    reset_engine_cache()
+
+
+def test_py_pool_flattens_unpicklable_exception(monkeypatch):
+    """An exception that can't round-trip the pool's result pickle is
+    flattened to a RuntimeError carrying type and message."""
+    monkeypatch.setenv("REPRO_SIM_ENGINE", "py")
+    reset_engine_cache()
+
+    class Unpicklable(Exception):
+        def __init__(self, msg):
+            super().__init__(msg)
+            self.fh = open(os.devnull)      # defeats pickle
+
+    def boom(ctx):
+        raise Unpicklable("cannot cross the pool")
+
+    monkeypatch.setattr(_engine_py, "run", boom)
+    with pytest.raises(Exception):
+        pickle.dumps(Unpicklable("x"))
+    machine = Machine(TOPO)
+    wl = bots.fft(n=1 << 10, cutoff=8)
+    grid = machine.grid(workloads=[wl], schedulers=("wf",), threads=16,
+                        seeds=2)
+    res = grid.run(strict=False, workers=2)
+    for err in res.values():
+        assert isinstance(err, CellError)
+        assert isinstance(err.error, (RuntimeError, Unpicklable))
+        assert "cannot cross the pool" in str(err.error)
+    reset_engine_cache()
+
+
+def test_run_batch_returns_per_cell_slots(engine):
+    """Both engines' run_batch return one entry per context, in order,
+    each a result dict or an exception object (never a raise that
+    poisons the batch)."""
+    from repro.core.sim import policy
+    from repro.core.sim.runtime import _prepare_ctx
+    machine = Machine(TOPO)
+    wl = bots.fft(n=1 << 10, cutoff=8)
+    ectx = machine.context(16)
+    spec = policy.get_spec("wf")
+    ctxs = [_prepare_ctx(ectx, wl, spec, seed) for seed in (0, 1, 2)]
+    mod = _csim if engine == "c" else _engine_py
+    outs = mod.run_batch(ctxs, workers=2)
+    assert len(outs) == 3
+    assert all(isinstance(o, dict) and "makespan" in o for o in outs)
+    serial = [mod.run_batch([_prepare_ctx(ectx, wl, spec, s)])[0]
+              for s in (0, 1, 2)]
+    assert outs == serial
+
+
+# ----------------------------------------------------------------------
+# graceful degradation
+# ----------------------------------------------------------------------
+
+def test_py_pool_failure_falls_back_serial(monkeypatch):
+    monkeypatch.setenv("REPRO_SIM_ENGINE", "py")
+    reset_engine_cache()
+    import multiprocessing as mp
+
+    def no_ctx(method=None):
+        raise ValueError("fork unavailable")
+
+    monkeypatch.setattr(mp, "get_context", no_ctx)
+    monkeypatch.setattr(_engine_py, "_warned_no_pool", False)
+    machine = Machine(TOPO)
+    wl = bots.fft(n=1 << 10, cutoff=8)
+    grid = machine.grid(workloads=[wl], schedulers=("wf",), threads=16,
+                        seeds=2)
+    base = grid.run(workers=1)
+    with pytest.warns(RuntimeWarning, match="multiprocessing pool"):
+        assert grid.run(workers=2) == base
+    # warning fires once
+    res = grid.run(workers=2)
+    assert res == base
+    reset_engine_cache()
+
+
+@pytest.mark.skipif(not HAVE_C, reason="C kernel unavailable")
+def test_c_no_threads_build_falls_back_serial(monkeypatch):
+    monkeypatch.setenv("REPRO_SIM_ENGINE", "c")
+    reset_engine_cache()
+    machine = Machine(TOPO)
+    wl = bots.fft(n=1 << 10, cutoff=8)
+    grid = machine.grid(workloads=[wl], schedulers=("wf",), threads=16,
+                        seeds=2)
+    base = grid.run(workers=1)
+    monkeypatch.setattr(_csim, "threads_supported", False)
+    monkeypatch.setattr(_csim, "_warned_no_threads", False)
+    with pytest.warns(RuntimeWarning, match="without pthread"):
+        assert grid.run(workers=2) == base
+    reset_engine_cache()

@@ -17,7 +17,7 @@ import numpy as np
 import pytest
 
 from repro.core import placement, topology
-from repro.core.sim import bots, simulate
+from repro.core.sim import SweepPlan, bots, simulate
 from repro.core.sim import _csim
 from repro.core.sim.table import compile_tree
 
@@ -58,6 +58,21 @@ def test_golden_parity(engine, topo_name, sched):
     for wl_name, wl in _small_workloads().items():
         r = simulate(topo, list(range(8)), wl, sched, seed=7)
         _assert_matches(r, f"{topo_name}/{wl_name}/{sched}")
+
+
+@pytest.mark.parametrize("topo_name", sorted(TOPOS))
+def test_golden_parity_batched(engine, topo_name):
+    """The same fixtures through the batched sweep path — the one that
+    dispatches across the worker pool. ``REPRO_SIM_WORKERS`` (the CI
+    matrix runs 1 and 4) must never change a bit."""
+    topo = TOPOS[topo_name]
+    plan, keys = SweepPlan(), []
+    for wl_name, wl in _small_workloads().items():
+        for sched in SCHEDS:
+            plan.add(topo, list(range(8)), wl, sched, seed=7)
+            keys.append(f"{topo_name}/{wl_name}/{sched}")
+    for r, key in zip(plan.run(), keys):
+        _assert_matches(r, key)
 
 
 def test_golden_parity_baseline_numa(engine):
