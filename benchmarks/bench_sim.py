@@ -263,6 +263,63 @@ def bench_parallel(reps: int = 3, quick: bool = False):
     return gated, detail
 
 
+def bench_store(reps: int = 3, quick: bool = False):
+    """Durable-sweep overhead rows: the fft-medium 5-sched × 6-T grid
+    run through a :class:`~repro.core.sim.ResultStore`.
+
+    Two gated rows per engine, keyed like every other results row:
+
+    * ``scale="medium+journal"`` — a *cold* store (fresh journal each
+      rep): every cell simulates and commits one JSONL line, so
+      ``warm_s`` measures journaling overhead on top of the plain
+      ``medium+batch`` row it must stay ≈ equal to.
+    * ``scale="medium+storehit"`` — a *fully warm* store: every cell
+      replays from the in-memory index without invoking the engine, so
+      ``warm_s`` is the pure store-hit sweep latency (and is asserted
+      engine-free by running with the workers pool untouched).
+    """
+    import tempfile
+
+    machine = Machine(topology.sunfire_x4600())
+    wl = bots.fft(n=1 << 15, cutoff=4)
+    thread_counts = (2, 4, 6, 8, 12, 16)
+    from repro.core.sim import ResultStore
+    rows = []
+    for engine in _engines():
+        with _engine_env(engine):
+            grid = machine.grid(workloads=[wl], schedulers=STOCK,
+                                threads=thread_counts)
+            n = len(grid.keys)
+            base_res = grid.run(workers=1)   # warm every shared cache
+            with tempfile.TemporaryDirectory() as tmp:
+                cold = float("inf")
+                for i in range(reps):
+                    path = os.path.join(tmp, f"j{i}.jsonl")
+                    t0 = time.perf_counter()
+                    res = grid.run(workers=1, store=path)
+                    cold = min(cold, time.perf_counter() - t0)
+                    assert res == base_res, "journaled run diverged"
+                warm_store = ResultStore(os.path.join(tmp, "warm.jsonl"))
+                grid.run(workers=1, store=warm_store)
+                hit = float("inf")
+                for _ in range(reps):
+                    t0 = time.perf_counter()
+                    res = grid.run(workers=1, store=warm_store)
+                    hit = min(hit, time.perf_counter() - t0)
+                assert res == base_res, "store replay diverged"
+                warm_store.close()
+            tasks = ensure_table(wl).n
+            for scale, wall in (("medium+journal", cold),
+                                ("medium+storehit", hit)):
+                rows.append(dict(
+                    workload="fft", scale=scale, tasks=tasks,
+                    scheduler="batch", engine=engine, threads=16,
+                    build_s=0.0, cold_s=0.0, warm_s=round(wall, 6),
+                    tasks_per_s=round(tasks * n / wall, 1),
+                    makespan=0.0, speedup=0.0, steals=0))
+    return rows
+
+
 def check(rows, baseline_path: str, threshold: float = 0.25,
           abs_slack: float = 0.001) -> int:
     """Compare fresh warm_s against the committed baseline; returns the
@@ -334,7 +391,8 @@ def main() -> None:
     for row in itertools.chain(
             bench(args.quick, args.reps, args.threads),
             bench_fault_hook(args.reps, args.threads),
-            batch_rows):
+            batch_rows,
+            bench_store(reps=1 if args.quick else 3, quick=args.quick)):
         rows.append(row)
         print(f"{row['workload']},{row['scale']},{row['tasks']},"
               f"{row['scheduler']},{row['engine']},{row['build_s']:.3f},"
@@ -371,7 +429,10 @@ def main() -> None:
                  "the per-call loop on the same grid; parallel rows "
                  "time the same grid across the in-batch worker pool "
                  "(scale='medium+batch' results rows gate workers=1; "
-                 "parallel speedup is bounded by cpu_count)."),
+                 "parallel speedup is bounded by cpu_count). "
+                 "medium+journal / medium+storehit rows gate the "
+                 "durable-sweep path: cold-journal overhead and the "
+                 "warm store-hit replay (no engine calls)."),
         results=rows,
         sweep=sweep_rows,
         parallel=parallel_rows)

@@ -25,6 +25,8 @@ across the engine worker pool) and report speedups as mean ± CI95.
 
 from __future__ import annotations
 
+import os
+
 from repro.core import topology
 from repro.core.sim import Grid, Machine, SimParams, bots
 
@@ -80,6 +82,22 @@ def _serial(name: str) -> float:
                                placement=f"spill:{SPILL[name]}@0")
 
 
+# Durable-sweep opt-in: REPRO_SIM_STORE=path.jsonl journals every figure
+# cell and replays journaled ones, so an interrupted figure campaign
+# resumes where it stopped and a fully warm journal replays the grids
+# without invoking either engine. One shared store across all figures.
+_STORE = None
+
+
+def _figure_store():
+    global _STORE
+    path = os.environ.get("REPRO_SIM_STORE")
+    if path and _STORE is None:
+        from repro.core.sim import ResultStore
+        _STORE = ResultStore(path)
+    return _STORE
+
+
 def plan_benchmark(name: str, schedulers=("bf", "cilk", "wf"),
                    threads=THREADS, seed: int = 0, seeds=None) -> Grid:
     """The (scheduler × variant × T) grid for one BOTS benchmark.
@@ -91,7 +109,7 @@ def plan_benchmark(name: str, schedulers=("bf", "cilk", "wf"),
         workloads={name: _workload(name)}, schedulers=schedulers,
         threads=threads, contexts=variants(name),
         seeds=(seed,) if seeds is None else seeds,
-        serial_reference=_serial(name))
+        serial_reference=_serial(name), store=_figure_store())
 
 
 def run_benchmark(name: str, schedulers=("bf", "cilk", "wf"),
@@ -149,7 +167,8 @@ def fig_13_to_15(report, quick=False):
         MACHINE.grid(workloads={name: _workload(name)}, schedulers=scheds,
                      threads=threads, seeds=seeds,
                      contexts={"numa": variants(name)["numa"]},
-                     serial_reference=_serial(name))
+                     serial_reference=_serial(name),
+                     store=_figure_store())
         for name in names])
     speedups = {(k.workload, k.threads, k.scheduler): s.speedup
                 for k, s in grid.run_stats().items()}

@@ -73,15 +73,19 @@ def _workload(quick: bool, scale: str):
 
 
 def sweep(machine: Machine, wl, *, axes, threads: int, seeds, span: float,
-          workers=None):
+          workers=None, store=None, timeout=None, retry=None):
     """Yield one row per (fault kind, intensity, scheduler): mean
     makespan over seeds, inflation vs the faults-off baseline, and the
     fault accounting. ``workers`` sets the batch pool size (None:
-    resolve from REPRO_SIM_WORKERS / cpu count)."""
+    resolve from REPRO_SIM_WORKERS / cpu count); ``store`` journals
+    every completed cell so an interrupted campaign resumes (pass
+    ``--store`` on the CLI); ``timeout``/``retry`` engage the
+    kill-capable supervisor (see :func:`repro.core.sim.run_sweep`)."""
+    kw = dict(workers=workers, store=store, timeout=timeout, retry=retry)
     master = machine.context(threads).thread_cores[0]
     base = machine.grid(workloads=[wl], schedulers=SCHEDULERS,
                         threads=threads, seeds=seeds)
-    base_res = base.run(strict=False, workers=workers)
+    base_res = base.run(strict=False, **kw)
     baseline = {}
     for k, r in base_res.items():
         if isinstance(r, CellError):
@@ -94,7 +98,7 @@ def sweep(machine: Machine, wl, *, axes, threads: int, seeds, span: float,
             grid = machine.grid(workloads=[wl], schedulers=SCHEDULERS,
                                 threads=threads, seeds=seeds,
                                 faults=[spec])
-            res = grid.run(strict=False, workers=workers)
+            res = grid.run(strict=False, **kw)
             per_sched: dict = {}
             for k, r in res.items():
                 per_sched.setdefault(k.scheduler, []).append(r)
@@ -159,6 +163,17 @@ def main() -> None:
     ap.add_argument("--workers", type=int, default=None,
                     help="batch worker pool size (default: "
                          "REPRO_SIM_WORKERS, then cpu count)")
+    ap.add_argument("--store", default=None,
+                    help="durable-sweep journal (JSONL): completed cells "
+                         "are committed as they finish and replayed on "
+                         "re-run, so an interrupted campaign resumes")
+    ap.add_argument("--timeout", type=float, default=None,
+                    help="per-cell wall-clock timeout in seconds "
+                         "(default: REPRO_SIM_TIMEOUT); enables the "
+                         "kill-capable supervised pool")
+    ap.add_argument("--retries", type=int, default=None,
+                    help="retry transient cell failures up to N times "
+                         "with backoff, degrading C->py")
     ap.add_argument("--out", default=None,
                     help="write rows as JSON (default: stdout only)")
     args = ap.parse_args()
@@ -172,12 +187,22 @@ def main() -> None:
     probe = machine.run(wl, "wf", threads=args.threads)
     span = max(probe.makespan / 2, 1.0)
 
+    store = None
+    if args.store:
+        from repro.core.sim import ResultStore
+        store = ResultStore(args.store)
+    retry = None
+    if args.retries is not None:
+        from repro.core.sim import RetryPolicy
+        retry = RetryPolicy(retries=args.retries)
+
     t0 = time.perf_counter()
     rows = []
     print("kind,intensity,scheduler,makespan,baseline,inflation,"
           "reclaimed,reexec,fault_lost,failed_cells")
     for row in sweep(machine, wl, axes=axes, threads=args.threads,
-                     seeds=seeds, span=span, workers=args.workers):
+                     seeds=seeds, span=span, workers=args.workers,
+                     store=store, timeout=args.timeout, retry=retry):
         rows.append(row)
         if "makespan" in row:
             print(f"{row['kind']},{row['intensity']},{row['scheduler']},"
@@ -191,6 +216,9 @@ def main() -> None:
     dt = time.perf_counter() - t0
     print(f"# {len(rows)} rows ({name}, T={args.threads}, "
           f"seeds={len(seeds)}) in {dt:.1f}s")
+    if store is not None:
+        print(f"# store: {store!r}")
+        store.close()
 
     bad = _parity_check(machine, wl, args.threads, span) if args.quick \
         else 0

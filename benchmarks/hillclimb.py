@@ -117,13 +117,21 @@ def cell_sim():
     Each variant flips exactly one execution-context knob relative to
     the previous row — the paper's §IV→§V→§VI progression, plus the
     policy layer's hierarchical-stealing step beyond it.
+
+    Every cell is evaluated through the persistent result store
+    (artifacts/hillclimb/sim_cells.jsonl): repeated searches over the
+    same (topology, workload) replay already-scored variants from the
+    journal instead of re-simulating them — the substrate the ROADMAP
+    auto-tuner's search loop builds on.
     """
     from repro.core import topology
-    from repro.core.sim import Machine, bots
+    from repro.core.sim import Machine, ResultStore, bots
 
     m = Machine(topology.sunfire_x4600())
     wl = bots.fft(n=1 << 15, cutoff=4)
     serial = m.serial_time(wl, placement="spill:2@0")
+    os.makedirs(ART, exist_ok=True)
+    store = ResultStore(os.path.join(ART, "sim_cells.jsonl"))
     base = dict(placement="spill:2@0", runtime_data=0, migration_rate=0.15)
     variants = [
         ("baseline-nanos", "wf", dict(binding="linear", **base)),
@@ -143,7 +151,7 @@ def cell_sim():
           f"{'steals':>8} {'queue_wait':>10}")
     for label, sched, ctx_kw in variants:
         r = m.run(wl, sched, seed=0, threads=16, serial_reference=serial,
-                  **ctx_kw)
+                  store=store, **ctx_kw)
         rows.append(dict(variant=label, scheduler=sched,
                          speedup=round(r.speedup, 4),
                          remote_work_fraction=round(r.remote_work_fraction,
@@ -153,6 +161,8 @@ def cell_sim():
         print(f"{label:22s} {sched:10s} {r.speedup:8.2f} "
               f"{r.remote_work_fraction * 100:8.2f} {r.steals:8d} "
               f"{r.queue_wait:10.1f}")
+    print(f"[store] {store!r}")
+    store.close()
     return rows
 
 

@@ -1,7 +1,7 @@
 from .runtime import (TaskSpec, Workload, SimParams, SimResult, SimStalled,
                       simulate, run_context, serial_time, resolve_workers,
-                      SCHEDULERS, SchedulerSpec, TaskTable, ensure_table,
-                      reset_engine_cache)
+                      resolve_timeout, SCHEDULERS, SchedulerSpec, TaskTable,
+                      ensure_table, reset_engine_cache)
 from .policy import register, get_spec, compile_victim_plan
 from .context import (BindingSpec, PlacementSpec, ExecContext, BINDINGS,
                       PLACEMENTS, register_binding, register_placement,
@@ -9,6 +9,8 @@ from .context import (BindingSpec, PlacementSpec, ExecContext, BINDINGS,
 from .faults import (FaultSpec, FaultPlan, FAULTS, register_fault,
                      get_fault, get_faults, compile_fault_plan)
 from .machine import Machine, Grid, GridKey
-from .sweep import (SweepConfig, SweepPlan, CellError, run_sweep,
+from .sweep import (SweepConfig, SweepPlan, CellError, CellTimeout,
+                    WorkerDied, RetryPolicy, run_sweep,
                     Stat, CellStats, aggregate)
-from . import bots, context, faults, machine, policy, sweep
+from .store import ResultStore, cell_key, workload_fingerprint
+from . import bots, context, faults, machine, policy, store, sweep

@@ -48,10 +48,11 @@ from __future__ import annotations
 
 import heapq
 import pickle
+import traceback
 import warnings
 from collections import deque
 
-__all__ = ["run", "run_batch"]
+__all__ = ["run", "run_batch", "run_supervised"]
 
 
 def run(ctx) -> dict:
@@ -454,12 +455,17 @@ _warned_no_pool = False
 def _picklable(exc: BaseException) -> BaseException:
     """Exceptions must survive the trip back through the pool's result
     pickle; anything that doesn't round-trip is flattened to a
-    RuntimeError carrying the original type and message."""
+    RuntimeError carrying the original type and message. The worker's
+    formatted stack rides along as ``remote_traceback`` (a plain string
+    lives in ``__dict__``, which ``BaseException.__reduce__`` preserves
+    through the pickle) so a fork-worker failure is debuggable from the
+    parent."""
     try:
         pickle.loads(pickle.dumps(exc))
-        return exc
     except Exception:
-        return RuntimeError(f"{type(exc).__name__}: {exc}")
+        exc = RuntimeError(f"{type(exc).__name__}: {exc}")
+    exc.remote_traceback = traceback.format_exc()
+    return exc
 
 
 def _mp_cell(i: int):
@@ -506,3 +512,184 @@ def run_batch(ctxs, workers: int = 1) -> list:
         except Exception as e:       # noqa: BLE001 — isolate the cell
             out.append(e)
     return out
+
+
+# ------------------------------------------------------------------ #
+# supervised execution: kill-capable workers + wall-clock timeouts   #
+# ------------------------------------------------------------------ #
+#
+# mp.Pool cannot enforce a per-task deadline — a wedged C call or a
+# SIGKILLed worker hangs or poisons the whole map. The supervisor below
+# manages raw fork Processes over Pipes, one in-flight cell per worker,
+# so a cell that overruns its wall-clock budget (or whose worker dies)
+# is killed + its worker respawned while sibling cells keep running.
+# Contexts and the per-cell run function (either engine's ``run``)
+# travel to workers by fork inheritance via the module globals, same
+# as the plain pool above; respawns fork from the supervising parent,
+# which still holds them.
+
+_SUP_CTXS: list | None = None
+_SUP_RUN = None
+
+
+def _sup_child(conn):
+    """Worker main: receive a cell index, run it, send a tagged reply.
+
+    A ``None`` message (or a closed pipe) shuts the worker down. Errors
+    are isolated per cell, flattened picklable with the remote stack
+    attached — the worker survives to take the next assignment.
+    """
+    while True:
+        try:
+            i = conn.recv()
+        except (EOFError, OSError):
+            return
+        if i is None:
+            return
+        try:
+            reply = ("ok", i, _SUP_RUN(_SUP_CTXS[i]))
+        except Exception as e:       # noqa: BLE001 — isolate the cell
+            reply = ("err", i, _picklable(e))
+        try:
+            conn.send(reply)
+        except (BrokenPipeError, OSError):
+            return
+
+
+def run_supervised(ctxs, workers: int, timeout: "float | None",
+                   run_fn=None) -> list:
+    """Run many prepared contexts under kill-capable supervision.
+
+    Like :func:`run_batch`, but each worker is a directly-managed fork
+    :class:`~multiprocessing.Process` with a dedicated pipe, one
+    in-flight cell at a time. Returns one *tagged* entry per context:
+
+    * ``("ok", result_dict)`` — the cell completed;
+    * ``("err", exc)``       — the cell raised (picklable, with
+      ``remote_traceback``);
+    * ``("timeout", t)``     — the cell exceeded ``timeout`` seconds of
+      wall clock; its worker was killed and respawned;
+    * ``("died",)``          — the worker vanished mid-cell (SIGKILL,
+      OOM-kill, segfault); it was respawned and the batch completed.
+
+    ``run_fn`` is the per-cell engine entry (default: this module's
+    :func:`run`; pass ``_csim.run`` to supervise the C kernel — the
+    whole point of process-level supervision is that it works even when
+    the hang is inside a C call the parent cannot interrupt). When fork
+    is unavailable the batch degrades to in-process serial execution
+    with a one-time warning — error isolation survives, timeouts and
+    kill-resilience cannot.
+    """
+    global _SUP_CTXS, _SUP_RUN, _warned_no_pool
+    ctxs = list(ctxs)
+    n = len(ctxs)
+    if not n:
+        return []
+    run_fn = run_fn or run
+    try:
+        import multiprocessing as mp
+        from multiprocessing import connection as mpconn
+        mpctx = mp.get_context("fork")
+    except (ImportError, ValueError, OSError) as e:
+        if not _warned_no_pool:
+            _warned_no_pool = True
+            warnings.warn(
+                f"multiprocessing pool unavailable ({e}); running "
+                "supervised batch in-process (timeouts not enforced)",
+                RuntimeWarning, stacklevel=2)
+        out = []
+        for ctx in ctxs:
+            try:
+                out.append(("ok", run_fn(ctx)))
+            except Exception as exc:  # noqa: BLE001 — isolate the cell
+                out.append(("err", exc))
+        return out
+
+    import time
+    results: list = [None] * n
+    queue = list(range(n))           # cells awaiting a worker
+    _SUP_CTXS, _SUP_RUN = ctxs, run_fn
+    # worker slot: [proc, parent_conn, cell (-1 idle), deadline]
+    slots: list = []
+
+    def spawn():
+        pconn, cconn = mpctx.Pipe()
+        p = mpctx.Process(target=_sup_child, args=(cconn,), daemon=True)
+        p.start()
+        cconn.close()
+        return [p, pconn, -1, float("inf")]
+
+    def retire(slot):
+        p, pc = slot[0], slot[1]
+        try:
+            pc.close()
+        except OSError:
+            pass
+        p.kill()
+        p.join()
+
+    try:
+        for _ in range(max(1, min(workers, n))):
+            slots.append(spawn())
+        done = 0
+        while done < n:
+            now = time.monotonic()
+            for slot in slots:
+                if slot[2] < 0 and queue:
+                    i = queue.pop(0)
+                    try:
+                        slot[1].send(i)
+                    except (BrokenPipeError, OSError):
+                        # worker died between cells: replace it and
+                        # put the cell back
+                        queue.insert(0, i)
+                        retire(slot)
+                        slot[:] = spawn()
+                        continue
+                    slot[2] = i
+                    slot[3] = now + timeout if timeout else float("inf")
+            busy = [s for s in slots if s[2] >= 0]
+            if not busy:
+                continue        # every assignment hit a dead pipe: retry
+            deadline = min(s[3] for s in busy)
+            wait_for = None if deadline == float("inf") \
+                else max(deadline - time.monotonic(), 0.0)
+            ready = mpconn.wait([s[1] for s in busy], timeout=wait_for)
+            ready_set = set(ready)
+            now = time.monotonic()
+            for slot in busy:
+                if slot[1] in ready_set:
+                    try:
+                        tag, i, payload = slot[1].recv()
+                    except (EOFError, OSError):
+                        # worker vanished mid-cell (SIGKILL / segfault)
+                        results[slot[2]] = ("died",)
+                        done += 1
+                        retire(slot)
+                        slot[:] = spawn()
+                        continue
+                    results[i] = (tag, payload)
+                    done += 1
+                    slot[2], slot[3] = -1, float("inf")
+                elif now >= slot[3]:
+                    results[slot[2]] = ("timeout", timeout)
+                    done += 1
+                    retire(slot)
+                    slot[:] = spawn()
+    finally:
+        _SUP_CTXS = _SUP_RUN = None
+        for slot in slots:
+            try:
+                slot[1].send(None)
+            except (BrokenPipeError, OSError):
+                pass
+        for slot in slots:
+            slot[0].join(timeout=1.0)
+            if slot[0].is_alive():
+                slot[0].kill()
+                slot[0].join()
+            try:
+                slot[1].close()
+            except OSError:
+                pass
+    return results

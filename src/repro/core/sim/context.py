@@ -397,6 +397,34 @@ class ExecContext:
         """Compact display identity, e.g. ``paper/spill:2``."""
         return f"{self.binding.name}/{self.placement.name}"
 
+    def fingerprint(self) -> str:
+        """Stable content digest of everything this context makes the
+        engines observe: the topology fingerprint, the *lowered*
+        core/node tuples (so ``binding="paper"`` and an explicit core
+        list that lowers identically share one identity), the
+        runtime-data/migration knobs, the fault model fields, and the
+        cost-model constants from ``params``. Execution knobs that
+        cannot change a result (``SimParams.workers``) are excluded.
+        The persistent result store keys cells on this. Cached (the
+        context is frozen and shared across sweep cells).
+        """
+        fp = self.__dict__.get("_fingerprint")
+        if fp is None:
+            import hashlib
+            pfields = tuple(
+                (f.name, getattr(self.params, f.name))
+                for f in dataclasses.fields(self.params)
+                if f.name != "workers")
+            material = (self.topo.fingerprint(), self.thread_cores,
+                        self.root_data_nodes, self.runtime_data_node,
+                        self.migration_rate,
+                        tuple(dataclasses.astuple(f) for f in self.faults),
+                        pfields)
+            fp = hashlib.blake2b(repr(material).encode(),
+                                 digest_size=16).hexdigest()
+            object.__setattr__(self, "_fingerprint", fp)
+        return fp
+
     @classmethod
     def compile(cls, topo: Topology, params, threads: Optional[int] = None,
                 binding="paper", placement="first_touch",

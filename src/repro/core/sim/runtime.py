@@ -94,8 +94,8 @@ from .table import TaskTable, compile_tree
 __all__ = [
     "TaskSpec", "Workload", "SimParams", "SimResult", "SimStalled",
     "simulate", "run_context", "serial_time", "resolve_workers",
-    "SCHEDULERS", "SchedulerSpec", "TaskTable", "ensure_table",
-    "reset_engine_cache",
+    "resolve_timeout", "SCHEDULERS", "SchedulerSpec", "TaskTable",
+    "ensure_table", "reset_engine_cache",
 ]
 
 
@@ -328,6 +328,28 @@ def resolve_workers(workers: "int | None" = None,
             raise ValueError(
                 f"REPRO_SIM_WORKERS={env!r}: expected an integer") from None
     return os.cpu_count() or 1
+
+
+def resolve_timeout(timeout: "float | None" = None) -> "float | None":
+    """Resolve the per-cell wall-clock timeout (seconds, or None).
+
+    Precedence: explicit ``timeout`` argument > the ``REPRO_SIM_TIMEOUT``
+    env var > None (no deadline). ``0`` or negative disables. A timeout
+    routes batches through the supervised fork pool (see
+    :func:`~.sweep.run_sweep`) so a wedged C call or dead worker can be
+    killed, not merely observed.
+    """
+    if timeout is not None:
+        return float(timeout) if timeout > 0 else None
+    env = os.environ.get("REPRO_SIM_TIMEOUT")
+    if env is not None and env.strip():
+        try:
+            t = float(env)
+        except ValueError:
+            raise ValueError(
+                f"REPRO_SIM_TIMEOUT={env!r}: expected seconds") from None
+        return t if t > 0 else None
+    return None
 
 
 # (env value, resolved engine); revalidated only when the variable

@@ -44,6 +44,8 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import os
+import time
 from typing import Optional, Sequence
 
 import numpy as np
@@ -52,23 +54,96 @@ from . import _csim, _engine_py, policy
 from .context import ExecContext
 from .runtime import (SimParams, SimResult, SimStalled, Workload,
                       _finish_result, _prepare_ctx, _select_engine,
-                      resolve_workers, serial_time)
+                      resolve_timeout, resolve_workers, serial_time)
 
-__all__ = ["SweepConfig", "SweepPlan", "CellError", "run_sweep",
+__all__ = ["SweepConfig", "SweepPlan", "CellError", "CellTimeout",
+           "WorkerDied", "RetryPolicy", "run_sweep",
            "Stat", "CellStats", "aggregate"]
+
+
+class CellTimeout(RuntimeError):
+    """A cell exceeded its wall-clock budget; its worker was killed.
+
+    Raised (or recorded, under ``strict=False``) by the supervised
+    batch path — this is the *wall-clock* complement of the step
+    watchdog: the watchdog catches a sim-logic stall inside a running
+    loop, the timeout catches a wedged C call or a loop that makes
+    steps too slowly to ever trip it.
+    """
+
+    def __init__(self, timeout: float, engine: str):
+        self.timeout = timeout
+        self.engine = engine
+        super().__init__(
+            f"cell exceeded the {timeout:g}s wall-clock timeout on the "
+            f"{engine!r} engine; worker killed")
+
+
+class WorkerDied(RuntimeError):
+    """A pool worker vanished mid-cell (SIGKILL, OOM-kill, segfault).
+
+    The supervisor respawned the worker; the cell's fate follows the
+    retry policy (the default re-attempts it — death is transient).
+    """
+
+    def __init__(self, engine: str):
+        self.engine = engine
+        super().__init__(
+            f"worker process died mid-cell on the {engine!r} engine "
+            "(killed or crashed); worker respawned")
+
+
+@dataclasses.dataclass(frozen=True)
+class RetryPolicy:
+    """Retry/degradation policy for transient cell failures.
+
+    A failed cell gets up to ``retries`` re-attempts beyond the first,
+    with ``backoff * 2**k`` seconds of sleep before retry round ``k``
+    (capped at ``max_backoff``) — transient causes (memory pressure,
+    a killed worker) benefit from yielding the machine briefly. With
+    ``degrade=True`` a cell whose C-engine attempt failed transiently
+    re-runs on the pure-Python engine (bit-identical results, no native
+    allocation, kill-safe), implementing the C → py → recorded-failure
+    ladder. Deterministic failures (:class:`~.runtime.SimStalled`, bad
+    configs, engine exceptions like ``ValueError``) are never retried —
+    they would fail identically every time.
+    """
+    retries: int = 2
+    backoff: float = 0.25
+    max_backoff: float = 4.0
+    degrade: bool = True
+
+
+# Failure types worth re-attempting: environmental, not deterministic.
+_TRANSIENT = (MemoryError, OSError, EOFError, CellTimeout, WorkerDied)
 
 
 @dataclasses.dataclass
 class CellError:
     """A failed sweep cell under ``strict=False``: the grid label of the
     offending config plus the error it raised. Takes the cell's slot in
-    the result list so the add()-order ↔ result mapping survives."""
+    the result list so the add()-order ↔ result mapping survives.
+
+    Parallel/durable paths add provenance: ``engine`` is the engine the
+    final attempt ran on, ``attempts`` records every attempt as
+    ``(engine, "ErrType: message")`` when the retry supervisor was
+    engaged, and ``traceback`` carries the failing worker's formatted
+    remote stack when the cell died inside a pool process.
+    """
     label: str
     index: int
     error: Exception
+    engine: str = ""
+    attempts: "tuple[tuple[str, str], ...]" = ()
+    traceback: str = ""
 
     def __repr__(self) -> str:
-        return (f"CellError({self.label!r}: "
+        via = f" [{self.engine}]" if self.engine else ""
+        if len(self.attempts) > 1:
+            trail = " -> ".join(f"{e}: {m.split(':')[0]}"
+                                for e, m in self.attempts)
+            via = f" [{len(self.attempts)} attempts: {trail}]"
+        return (f"CellError({self.label!r}{via}: "
                 f"{type(self.error).__name__}: {self.error})")
 
 
@@ -213,9 +288,12 @@ class SweepPlan:
     def __iter__(self):
         return iter(self.configs)
 
-    def run(self, strict: bool = True,
-            workers: "int | None" = None) -> "list[SimResult | CellError]":
-        return run_sweep(self, strict=strict, workers=workers)
+    def run(self, strict: bool = True, workers: "int | None" = None,
+            *, store=None, timeout: "float | None" = None,
+            retry: "RetryPolicy | None" = None
+            ) -> "list[SimResult | CellError]":
+        return run_sweep(self, strict=strict, workers=workers,
+                         store=store, timeout=timeout, retry=retry)
 
 
 def _cell_label(cfg: SweepConfig, i: int) -> str:
@@ -229,7 +307,10 @@ def _cell_label(cfg: SweepConfig, i: int) -> str:
 
 def run_sweep(plan: "SweepPlan | Sequence[SweepConfig]",
               strict: bool = True,
-              workers: "int | None" = None
+              workers: "int | None" = None,
+              *, store=None,
+              timeout: "float | None" = None,
+              retry: "RetryPolicy | None" = None
               ) -> "list[SimResult | CellError]":
     """Run every config in ``plan``; returns results in config order.
 
@@ -248,49 +329,164 @@ def run_sweep(plan: "SweepPlan | Sequence[SweepConfig]",
     slot, and the rest of the batch still runs. Under ``strict=True``
     (default) the first failure raises, with the cell label attached
     (``SimStalled.cell`` for stalls).
+
+    Durable execution (all opt-in, golden paths untouched):
+
+    * ``store`` — a :class:`~.store.ResultStore` (or a journal path):
+      cells whose :func:`~.store.cell_key` is already journaled are
+      *replayed* from the store — no context preparation, no engine
+      call — and every newly completed cell is committed before the
+      run returns. A fully warm store answers the whole sweep without
+      selecting an engine at all. Only successes are journaled;
+      failures are re-attempted on the next run.
+    * ``timeout`` — per-cell wall-clock seconds (default: the
+      ``REPRO_SIM_TIMEOUT`` env var). Batches then run on the
+      supervised fork pool — even for the C engine, whose ``run`` is
+      called inside the killable worker — so a cell that overruns is
+      killed, recorded as a :class:`CellTimeout`, and its siblings
+      keep running.
+    * ``retry`` — a :class:`RetryPolicy`: transient failures (memory
+      pressure, a killed/died worker, a timeout) are re-attempted with
+      capped exponential backoff, degrading C → py before recording a
+      failure. Deterministic failures never retry.
     """
     configs = list(plan.configs if isinstance(plan, SweepPlan) else plan)
     if not configs:
         return []
-    engine = _select_engine()
+    if store is not None and not hasattr(store, "get"):
+        from .store import ResultStore
+        store = ResultStore(os.fspath(store))
+    timeout = resolve_timeout(timeout)
     nw = resolve_workers(workers, next(
         (c.params for c in configs if c.params is not None), None))
     n = len(configs)
     results: "list[SimResult | CellError | None]" = [None] * n
-    prepared: list = []          # (index, ctx, serial)
+
+    # Pass 1: resolve config → context, satisfy store hits, collect the
+    # cells that actually need simulating. No engine is selected (or
+    # even required to exist) until a miss demands one.
+    pending: list = []           # per-cell mutable descriptor dicts
     for i, cfg in enumerate(configs):
         try:
             spec = policy.get_spec(cfg.scheduler)
             ectx = cfg.to_context()
-            ctx = _prepare_ctx(ectx, cfg.workload, spec, cfg.seed)
             if cfg.serial_reference is not None:
                 serial = cfg.serial_reference
             else:
+                # identical to the value derived from a prepared ctx:
+                # serial_time normalizes root_data_nodes the same way
                 serial = serial_time(ectx.topo, cfg.workload,
                                      ectx.thread_cores[0],
-                                     ctx["root_data_nodes"], ectx.params)
+                                     ectx.root_data_nodes, ectx.params)
+            key = None
+            if store is not None:
+                from .store import cell_key
+                key = cell_key(ectx, cfg.workload, spec, cfg.seed, serial)
+                hit = store.get(key)
+                if hit is not None:
+                    results[i] = hit
+                    continue
         except Exception as e:
             if strict:
                 raise
             results[i] = CellError(_cell_label(cfg, i), i, e)
             continue
-        prepared.append((i, ctx, serial))
+        pending.append(dict(i=i, cfg=cfg, spec=spec, ectx=ectx,
+                            serial=serial, key=key, attempts=[]))
 
-    batch = _csim.run_batch if engine == "c" else _engine_py.run_batch
-    outs = batch([ctx for _, ctx, _ in prepared], workers=nw)
-    for (i, ctx, serial), out in zip(prepared, outs):
-        if isinstance(out, Exception):
-            if strict:
-                raise out
-            results[i] = CellError(_cell_label(configs[i], i), i, out)
-            continue
-        try:
-            results[i] = _finish_result(ctx, out, serial, engine)
-        except SimStalled as e:
-            e = e.with_cell(_cell_label(configs[i], i))
-            if strict:
-                raise e from None
-            results[i] = CellError(e.cell, i, e)
+    if not pending:
+        return results           # fully warm store: engines never ran
+
+    engine0 = _select_engine()
+    for cell in pending:
+        cell["engine"] = engine0
+    max_attempts = 1 + (retry.retries if retry is not None else 0)
+
+    def record_failure(cell, err, eng):
+        i, cfg = cell["i"], cell["cfg"]
+        cell["attempts"].append((eng, f"{type(err).__name__}: {err}"))
+        transient = isinstance(err, _TRANSIENT)
+        if transient and len(cell["attempts"]) < max_attempts:
+            if retry is not None and retry.degrade and eng == "c":
+                cell["engine"] = "py"
+            return cell          # re-attempt next round
+        label = _cell_label(cfg, i)
+        if isinstance(err, SimStalled):
+            err = err.with_cell(label)
+            label = err.cell
+        if strict:
+            raise err
+        results[i] = CellError(
+            label, i, err, engine=eng,
+            attempts=tuple(cell["attempts"]),
+            traceback=getattr(err, "remote_traceback", ""))
+        return None
+
+    round_no = 0
+    while pending:
+        if round_no > 0 and retry is not None and retry.backoff > 0:
+            time.sleep(min(retry.backoff * (2 ** (round_no - 1)),
+                           retry.max_backoff))
+        round_no += 1
+        by_engine: dict = {}
+        for cell in pending:
+            by_engine.setdefault(cell["engine"], []).append(cell)
+        pending = []
+        for eng, cells in sorted(by_engine.items()):
+            # contexts are prepared fresh every round: a failed attempt
+            # consumed its rng stream and may have migrated its cores
+            prepared = []
+            for c in cells:
+                try:
+                    prepared.append(_prepare_ctx(c["ectx"],
+                                                 c["cfg"].workload,
+                                                 c["spec"], c["cfg"].seed))
+                except Exception as e:
+                    prepared.append(None)
+                    nxt = record_failure(c, e, eng)
+                    if nxt is not None:
+                        pending.append(nxt)
+            cells = [c for c, ctx in zip(cells, prepared) if ctx is not None]
+            ctxs = [ctx for ctx in prepared if ctx is not None]
+            if not ctxs:
+                continue
+            if timeout is not None:
+                # process-level supervision even for the C engine: its
+                # run() is called inside a killable fork worker
+                run_fn = _csim.run if eng == "c" else _engine_py.run
+                tagged = _engine_py.run_supervised(ctxs, nw, timeout,
+                                                   run_fn)
+            else:
+                batch = _csim.run_batch if eng == "c" \
+                    else _engine_py.run_batch
+                tagged = [("err", o) if isinstance(o, Exception)
+                          else ("ok", o)
+                          for o in batch(ctxs, workers=nw)]
+            for cell, ctx, out in zip(cells, ctxs, tagged):
+                kind = out[0]
+                if kind == "ok":
+                    try:
+                        res = _finish_result(ctx, out[1], cell["serial"],
+                                             eng)
+                    except SimStalled as e:
+                        # deterministic: the same stall reproduces on
+                        # every attempt, so it is never retried
+                        nxt = record_failure(cell, e, eng)
+                        assert nxt is None
+                        continue
+                    if store is not None:
+                        store.put(cell["key"], res)
+                    results[cell["i"]] = res
+                    continue
+                if kind == "err":
+                    err = out[1]
+                elif kind == "timeout":
+                    err = CellTimeout(out[1], eng)
+                else:            # "died"
+                    err = WorkerDied(eng)
+                nxt = record_failure(cell, err, eng)
+                if nxt is not None:
+                    pending.append(nxt)
     return results
 
 

@@ -41,7 +41,7 @@ class TaskTable:
     __slots__ = ("n", "work_pre", "work_post", "f_root", "f_parent",
                  "first_child", "num_children", "first_post", "num_post",
                  "parent", "cls", "cls_f_root", "cls_f_parent",
-                 "_serial_cache", "_lists")
+                 "_serial_cache", "_lists", "_fingerprint")
 
     def __init__(self, work_pre, work_post, f_root, f_parent,
                  first_child, num_children, first_post, num_post, parent):
@@ -71,6 +71,7 @@ class TaskTable:
         self.cls_f_parent = np.ascontiguousarray(uniq.imag)
         self._serial_cache: dict = {}
         self._lists = None
+        self._fingerprint = None
 
     @property
     def num_classes(self) -> int:
@@ -78,6 +79,27 @@ class TaskTable:
 
     def total_work(self) -> float:
         return float(self.work_pre.sum() + self.work_post.sum())
+
+    def fingerprint(self) -> str:
+        """Stable content digest of the compiled workload structure.
+
+        Hashes the defining per-task arrays (work, memory profiles,
+        child/post counts — the CSR index arrays and classes are derived
+        from these, so they add nothing). Two tables with equal
+        fingerprints describe the same computation regardless of how
+        they were built (tree compile vs paper-scale direct builder),
+        which is exactly the identity the persistent result store keys
+        on. Cached: paper-scale tables are tens of MB and the digest is
+        a one-time ~100 ms cost per workload.
+        """
+        if self._fingerprint is None:
+            import hashlib
+            h = hashlib.blake2b(digest_size=16)
+            for arr in (self.work_pre, self.work_post, self.f_root,
+                        self.f_parent, self.num_children, self.num_post):
+                h.update(arr.tobytes())
+            self._fingerprint = h.hexdigest()
+        return self._fingerprint
 
     def lists(self):
         """Python-list views of the hot arrays (cached).

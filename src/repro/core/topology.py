@@ -121,6 +121,30 @@ class Topology:
         """Latency ratio remote/local for cores a, b (>= 1)."""
         return 1.0 + self.hop_latency * self.core_distance(a, b)
 
+    def fingerprint(self) -> str:
+        """Stable content digest of the machine description.
+
+        Hashes everything the simulator's cost model can observe — the
+        core→node map, the hop-distance matrix, and the scalar model
+        knobs — so two topologies with equal fingerprints are
+        interchangeable as cache keys (the persistent result store and
+        the auto-tuner key evaluated cells on this). The name is
+        *excluded*: a renamed but physically identical machine must hit
+        the same cached cells. Cached on first use (the topology is
+        frozen).
+        """
+        fp = self.__dict__.get("_fingerprint")
+        if fp is None:
+            import hashlib
+            h = hashlib.blake2b(digest_size=16)
+            h.update(np.ascontiguousarray(self.core_node).tobytes())
+            h.update(np.ascontiguousarray(self.node_distance).tobytes())
+            h.update(repr((float(self.link_bandwidth),
+                           float(self.hop_latency))).encode())
+            fp = h.hexdigest()
+            object.__setattr__(self, "_fingerprint", fp)
+        return fp
+
     def cores_on_node(self, node: int) -> list[int]:
         return [int(c) for c in np.nonzero(self.core_node == node)[0]]
 

@@ -1,0 +1,455 @@
+"""Tests for the durable sweep layer: store, resume, timeout, retry.
+
+The tentpole contract: a journaled grid run interrupted at any point
+(even SIGKILL mid-batch) resumes bit-identically to an uninterrupted
+run, re-simulating only the incomplete cells; a fully warm store
+replays a grid without invoking either engine; a hung or killed worker
+is killed/respawned by the supervisor without stalling sibling cells;
+transient failures retry down the C → py → recorded-failure ladder.
+"""
+
+import json
+import os
+import signal
+import time
+
+import pytest
+
+from repro.core import topology
+from repro.core.sim import (CellError, CellTimeout, Machine, ResultStore,
+                            RetryPolicy, SimParams, SimResult, WorkerDied,
+                            bots, cell_key, policy, reset_engine_cache,
+                            resolve_timeout, workload_fingerprint)
+from repro.core.sim import _csim, _engine_py
+
+TOPO = topology.sunfire_x4600()
+HAVE_C = _csim.load() is not None
+ENGINES = ["py", "c"] if HAVE_C else ["py"]
+
+
+@pytest.fixture(params=ENGINES)
+def engine(request, monkeypatch):
+    monkeypatch.setenv("REPRO_SIM_ENGINE", request.param)
+    reset_engine_cache()
+    yield request.param
+    reset_engine_cache()
+
+
+def _wl():
+    return bots.fft(n=1 << 10, cutoff=8)
+
+
+def _grid(machine, wl, seeds=3):
+    return machine.grid(workloads=[wl], schedulers=("wf", "dfwsrpt"),
+                        threads=(4, 16), seeds=seeds,
+                        faults=[None, "straggler:1.0"])
+
+
+# ----------------------------------------------------------------------
+# fingerprints and keys
+# ----------------------------------------------------------------------
+
+def test_fingerprints_stable_and_content_addressed():
+    t1 = topology.sunfire_x4600()
+    t2 = topology.sunfire_x4600()
+    assert t1.fingerprint() == t2.fingerprint()
+    # the name is excluded: physically identical machines collide
+    import dataclasses
+    t3 = dataclasses.replace(t1, name="renamed")
+    assert t3.fingerprint() == t1.fingerprint()
+    assert topology.uma(16).fingerprint() != t1.fingerprint()
+
+    w1, w2 = _wl(), _wl()
+    assert workload_fingerprint(w1) == workload_fingerprint(w2)
+    w2.name = "renamed"
+    assert workload_fingerprint(w1) == workload_fingerprint(w2)
+    assert workload_fingerprint(bots.fft(n=1 << 11, cutoff=8)) \
+        != workload_fingerprint(w1)
+
+
+def test_cell_key_discriminates():
+    m = Machine(TOPO)
+    wl = _wl()
+    ectx = m.context(16)
+    spec = policy.get_spec("wf")
+    k = cell_key(ectx, wl, spec, 0, 100.0)
+    assert k == cell_key(ectx, wl, spec, 0, 100.0)
+    assert k != cell_key(ectx, wl, spec, 1, 100.0)          # seed
+    assert k != cell_key(ectx, wl, spec, 0, 101.0)          # serial ref
+    assert k != cell_key(ectx, wl, policy.get_spec("bf"), 0, 100.0)
+    assert k != cell_key(m.context(8), wl, spec, 0, 100.0)  # context
+    assert k != cell_key(m.context(16, faults="straggler:1.0"), wl,
+                         spec, 0, 100.0)                    # faults
+    # params affect results -> must affect the key (workers must not)
+    m2 = Machine(TOPO, SimParams(steal_time=9.0))
+    assert k != cell_key(m2.context(16), wl, spec, 0, 100.0)
+    m3 = Machine(TOPO, SimParams(workers=4))
+    assert k == cell_key(m3.context(16), wl, spec, 0, 100.0)
+
+
+# ----------------------------------------------------------------------
+# store roundtrip
+# ----------------------------------------------------------------------
+
+def test_store_roundtrip_exact(tmp_path, engine):
+    m = Machine(TOPO)
+    grid = _grid(m, _wl())
+    base = grid.run(workers=1)
+    path = tmp_path / "j.jsonl"
+    assert grid.run(workers=1, store=str(path)) == base
+    # reload from disk: every field bit-exact (floats via repr round-trip)
+    st = ResultStore(path)
+    assert len(st) == len(base)
+    replay = grid.run(workers=1, store=st)
+    assert st.hits == len(base)
+    for k in base:
+        assert replay[k] == base[k]
+        assert replay[k].makespan == base[k].makespan     # exact floats
+        assert replay[k].speedup == base[k].speedup
+        assert replay[k].engine == engine                 # provenance kept
+    st.close()
+
+
+def test_store_tolerates_torn_tail(tmp_path, engine):
+    m = Machine(TOPO)
+    grid = _grid(m, _wl())
+    base = grid.run(workers=1)
+    path = tmp_path / "j.jsonl"
+    grid.run(workers=1, store=str(path))
+    raw = path.read_bytes()
+    # tear the journal mid-final-line, as a SIGKILL mid-commit would
+    path.write_bytes(raw[:-17])
+    with pytest.warns(RuntimeWarning, match="torn final line"):
+        st = ResultStore(path)
+    assert len(st) == len(base) - 1
+    # resuming completes the missing cell and matches bit for bit
+    assert grid.run(workers=1, store=st) == base
+    st.close()
+    import warnings as _w
+    with _w.catch_warnings():
+        _w.simplefilter("error")            # repaired: loads clean now
+        st2 = ResultStore(path)
+    assert len(st2) == len(base)
+    st2.close()
+
+
+def test_store_header_and_first_write_wins(tmp_path):
+    path = tmp_path / "j.jsonl"
+    st = ResultStore(path)
+    r1 = SimResult(makespan=1.0, serial_time=2.0, speedup=2.0, tasks=3,
+                   steals=0, failed_probes=0, remote_work_fraction=0.0,
+                   queue_wait=0.0, engine="c")
+    r2 = SimResult(makespan=9.0, serial_time=2.0, speedup=2.0 / 9, tasks=3,
+                   steals=0, failed_probes=0, remote_work_fraction=0.0,
+                   queue_wait=0.0)
+    st.put("k1", r1)
+    st.put("k1", r2)                        # no-op: first write wins
+    assert st.get("k1") == r1
+    st.close()
+    lines = path.read_text().splitlines()
+    assert json.loads(lines[0]) == {"format": "repro-sim-store",
+                                    "version": 1}
+    assert len(lines) == 2                  # header + one entry
+
+
+# ----------------------------------------------------------------------
+# resume bit-identity; warm store never invokes an engine
+# ----------------------------------------------------------------------
+
+def test_interrupted_resume_bit_identical(tmp_path, engine, monkeypatch):
+    """Truncate a journal to simulate an interrupted campaign; the
+    resumed run matches the uninterrupted one and re-simulates only the
+    missing cells."""
+    m = Machine(TOPO)
+    grid = _grid(m, _wl())
+    base = grid.run(workers=1)
+    path = tmp_path / "j.jsonl"
+    grid.run(workers=1, store=str(path))
+    lines = path.read_text().splitlines(keepends=True)
+    keep = len(lines) // 2
+    path.write_text("".join(lines[:keep]))
+
+    calls = []
+    mod = _csim if engine == "c" else _engine_py
+    orig = mod.run_batch
+
+    def counting(ctxs, workers=1):
+        calls.append(len(list(ctxs)))
+        return orig(ctxs, workers=workers)
+
+    monkeypatch.setattr(mod, "run_batch", counting)
+    resumed = grid.run(workers=1, resume=str(path))
+    assert resumed == base
+    assert sum(calls) == len(base) - (keep - 1)   # only incomplete cells
+
+
+def test_warm_store_never_invokes_engine(tmp_path, engine, monkeypatch):
+    m = Machine(TOPO)
+    grid = _grid(m, _wl())
+    path = tmp_path / "j.jsonl"
+    base = grid.run(workers=1, store=str(path))
+
+    def boom(*a, **kw):
+        raise AssertionError("engine invoked on a fully warm store")
+
+    monkeypatch.setattr(_csim, "run_batch", boom)
+    monkeypatch.setattr(_csim, "run", boom)
+    monkeypatch.setattr(_engine_py, "run_batch", boom)
+    monkeypatch.setattr(_engine_py, "run", boom)
+    assert grid.run(workers=1, store=str(path)) == base
+
+
+def test_machine_run_through_store(tmp_path, engine):
+    m = Machine(TOPO)
+    wl = _wl()
+    st = ResultStore(tmp_path / "cells.jsonl")
+    r1 = m.run(wl, "wf", seed=0, threads=16, store=st)
+    direct = m.run(wl, "wf", seed=0, threads=16)
+    assert r1 == direct
+    assert len(st) == 1
+    r2 = m.run(wl, "wf", seed=0, threads=16, store=st)
+    assert r2 == r1 and st.hits == 1
+    st.close()
+
+
+# ----------------------------------------------------------------------
+# wall-clock timeout: hung cells killed, siblings unaffected
+# ----------------------------------------------------------------------
+
+def test_hung_cell_times_out_without_stalling_siblings(monkeypatch):
+    monkeypatch.setenv("REPRO_SIM_ENGINE", "py")
+    reset_engine_cache()
+    m = Machine(TOPO)
+    wl = _wl()
+    grid = m.grid(workloads=[wl], schedulers=("wf",), threads=16, seeds=4)
+    base = grid.run(workers=1)
+    orig = _engine_py.run
+
+    def hang(ctx):
+        if ctx["seed"] == 1:
+            time.sleep(3600)
+        return orig(ctx)
+
+    monkeypatch.setattr(_engine_py, "run", hang)
+    t0 = time.monotonic()
+    res = grid.run(strict=False, workers=2, timeout=2.0)
+    assert time.monotonic() - t0 < 60
+    reset_engine_cache()
+    vals = list(res.items())
+    errs = [(k, v) for k, v in vals if isinstance(v, CellError)]
+    assert len(errs) == 1
+    k, err = errs[0]
+    assert k.seed == 1
+    assert isinstance(err.error, CellTimeout)
+    assert err.engine == "py"
+    assert "wall-clock timeout" in str(err.error)
+    for k, v in vals:
+        if isinstance(v, SimResult):
+            assert v == base[k]               # siblings bit-exact
+
+
+def test_timeout_env_resolution(monkeypatch):
+    monkeypatch.delenv("REPRO_SIM_TIMEOUT", raising=False)
+    assert resolve_timeout() is None
+    assert resolve_timeout(5) == 5.0
+    assert resolve_timeout(0) is None         # 0 disables
+    monkeypatch.setenv("REPRO_SIM_TIMEOUT", "2.5")
+    assert resolve_timeout() == 2.5
+    assert resolve_timeout(9) == 9.0          # explicit beats env
+    monkeypatch.setenv("REPRO_SIM_TIMEOUT", "nope")
+    with pytest.raises(ValueError, match="REPRO_SIM_TIMEOUT"):
+        resolve_timeout()
+
+
+@pytest.mark.skipif(not HAVE_C, reason="C kernel unavailable")
+def test_supervised_path_matches_c_engine(monkeypatch):
+    """With a timeout set, C cells run inside killable fork workers —
+    results still bit-identical to the in-process C batch."""
+    monkeypatch.setenv("REPRO_SIM_ENGINE", "c")
+    reset_engine_cache()
+    m = Machine(TOPO)
+    grid = _grid(m, _wl())
+    base = grid.run(workers=1)
+    assert grid.run(workers=2, timeout=120.0) == base
+    reset_engine_cache()
+
+
+# ----------------------------------------------------------------------
+# worker death: SIGKILL mid-batch -> respawn, retry completes the batch
+# ----------------------------------------------------------------------
+
+def test_sigkilled_worker_respawned_and_batch_completes(
+        tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_SIM_ENGINE", "py")
+    reset_engine_cache()
+    m = Machine(TOPO)
+    wl = _wl()
+    grid = m.grid(workloads=[wl], schedulers=("wf",), threads=16, seeds=4)
+    base = grid.run(workers=1)
+    orig = _engine_py.run
+    flag = tmp_path / "killed-once"
+
+    def die_once(ctx):
+        if ctx["seed"] == 2 and not flag.exists():
+            flag.touch()
+            os.kill(os.getpid(), signal.SIGKILL)   # fork worker suicide
+        return orig(ctx)
+
+    monkeypatch.setattr(_engine_py, "run", die_once)
+    res = grid.run(strict=False, workers=2, timeout=120.0,
+                   retry=RetryPolicy(backoff=0.0))
+    reset_engine_cache()
+    assert flag.exists()
+    assert all(isinstance(v, SimResult) for v in res.values())
+    assert res == base
+
+
+def test_worker_death_without_retry_is_recorded(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_SIM_ENGINE", "py")
+    reset_engine_cache()
+    m = Machine(TOPO)
+    wl = _wl()
+    grid = m.grid(workloads=[wl], schedulers=("wf",), threads=16, seeds=3)
+    orig = _engine_py.run
+
+    def die(ctx):
+        if ctx["seed"] == 1:
+            os.kill(os.getpid(), signal.SIGKILL)
+        return orig(ctx)
+
+    monkeypatch.setattr(_engine_py, "run", die)
+    res = grid.run(strict=False, workers=2, timeout=120.0)
+    reset_engine_cache()
+    errs = [v for v in res.values() if isinstance(v, CellError)]
+    assert len(errs) == 1
+    assert isinstance(errs[0].error, WorkerDied)
+    assert sum(isinstance(v, SimResult) for v in res.values()) == 2
+
+
+# ----------------------------------------------------------------------
+# retry policy and the degradation ladder
+# ----------------------------------------------------------------------
+
+def test_transient_failure_retried(monkeypatch):
+    monkeypatch.setenv("REPRO_SIM_ENGINE", "py")
+    reset_engine_cache()
+    m = Machine(TOPO)
+    wl = _wl()
+    grid = m.grid(workloads=[wl], schedulers=("wf",), threads=16, seeds=2)
+    base = grid.run(workers=1)
+    orig = _engine_py.run_batch
+    fails = {"left": 1}
+
+    def flaky(ctxs, workers=1):
+        outs = orig(ctxs, workers=workers)
+        if fails["left"]:
+            fails["left"] -= 1
+            outs[0] = MemoryError("transient pressure")
+        return outs
+
+    monkeypatch.setattr(_engine_py, "run_batch", flaky)
+    res = grid.run(workers=1, retry=RetryPolicy(backoff=0.0))
+    reset_engine_cache()
+    assert res == base                        # retried cell bit-exact
+    assert fails["left"] == 0
+
+
+def test_deterministic_failure_not_retried(monkeypatch):
+    monkeypatch.setenv("REPRO_SIM_ENGINE", "py")
+    reset_engine_cache()
+    m = Machine(TOPO)
+    wl = _wl()
+    grid = m.grid(workloads=[wl], schedulers=("wf",), threads=16, seeds=1)
+    calls = {"n": 0}
+    orig = _engine_py.run_batch
+
+    def boom(ctxs, workers=1):
+        calls["n"] += 1
+        return [ValueError("deterministic bug") for _ in ctxs]
+
+    monkeypatch.setattr(_engine_py, "run_batch", boom)
+    res = grid.run(strict=False, workers=1,
+                   retry=RetryPolicy(retries=5, backoff=0.0))
+    reset_engine_cache()
+    err = next(iter(res.values()))
+    assert isinstance(err, CellError)
+    assert calls["n"] == 1                    # no retries
+    assert len(err.attempts) == 1
+
+
+@pytest.mark.skipif(not HAVE_C, reason="C kernel unavailable")
+def test_degradation_ladder_c_to_py(monkeypatch):
+    monkeypatch.setenv("REPRO_SIM_ENGINE", "c")
+    reset_engine_cache()
+    m = Machine(TOPO)
+    wl = _wl()
+    grid = m.grid(workloads=[wl], schedulers=("wf",), threads=16, seeds=2)
+    base = grid.run(workers=1)
+
+    def oom(ctxs, workers=1):
+        return [MemoryError("sim_run: allocation failed") for _ in ctxs]
+
+    monkeypatch.setattr(_csim, "run_batch", oom)
+    res = grid.run(strict=False, workers=1, retry=RetryPolicy(backoff=0.0))
+    reset_engine_cache()
+    assert all(isinstance(v, SimResult) for v in res.values())
+    assert res == base                        # py replays C bit-exactly
+    assert {v.engine for v in res.values()} == {"py"}
+
+
+@pytest.mark.skipif(not HAVE_C, reason="C kernel unavailable")
+def test_exhausted_ladder_records_attempt_trail(monkeypatch):
+    monkeypatch.setenv("REPRO_SIM_ENGINE", "c")
+    reset_engine_cache()
+
+    def oom(ctxs, workers=1):
+        return [MemoryError("oom") for _ in ctxs]
+
+    monkeypatch.setattr(_csim, "run_batch", oom)
+    monkeypatch.setattr(_engine_py, "run_batch", oom)
+    m = Machine(TOPO)
+    wl = _wl()
+    grid = m.grid(workloads=[wl], schedulers=("wf",), threads=16, seeds=1)
+    res = grid.run(strict=False, workers=1,
+                   retry=RetryPolicy(retries=2, backoff=0.0))
+    reset_engine_cache()
+    err = next(iter(res.values()))
+    assert isinstance(err, CellError)
+    assert [e for e, _ in err.attempts] == ["c", "py", "py"]
+    assert err.engine == "py"
+    r = repr(err)
+    assert "3 attempts" in r and "c: MemoryError" in r
+
+
+# ----------------------------------------------------------------------
+# CellError provenance: engine + remote traceback
+# ----------------------------------------------------------------------
+
+def test_cellerror_carries_engine_and_remote_traceback(monkeypatch):
+    monkeypatch.setenv("REPRO_SIM_ENGINE", "py")
+    reset_engine_cache()
+    orig = _engine_py.run
+
+    def boom(ctx):
+        if ctx["seed"] == 1:
+            raise ValueError("injected failure")
+        return orig(ctx)
+
+    monkeypatch.setattr(_engine_py, "run", boom)
+    m = Machine(TOPO)
+    wl = _wl()
+    grid = m.grid(workloads=[wl], schedulers=("wf",), threads=16, seeds=2)
+    res = grid.run(strict=False, workers=2)   # fork pool path
+    reset_engine_cache()
+    err = res[next(k for k in grid.keys if k.seed == 1)]
+    assert isinstance(err, CellError)
+    assert err.engine == "py"
+    assert "injected failure" in err.traceback
+    assert "boom" in err.traceback            # the remote frame is there
+    assert "[py]" in repr(err)
+
+
+def test_cellerror_legacy_positional_construction():
+    e = CellError("cell", 0, ValueError("x"))
+    assert e.engine == "" and e.attempts == () and e.traceback == ""
+    assert repr(e) == "CellError('cell': ValueError: x)"
