@@ -1,0 +1,162 @@
+"""Cross-process compile-cache smoke: cold build, then a warm hit.
+
+The persistent compile cache's whole point is *cross-process* reuse, so
+this harness measures it the only honest way: fresh interpreter per
+measurement.
+
+* **child mode** (``--child``): one process-lifecycle sample. Builds the
+  workload via ``bots.make``, runs one ``Machine.run`` under the paper
+  binding, and prints a JSON record — per-phase timings, the result
+  fields, the cache hit/miss counters, and whether *this* process
+  invoked the C compiler.
+* **driver mode** (default): points ``REPRO_SIM_CACHE`` at a fresh
+  temp directory, runs the child twice, and asserts the contract CI
+  pins: the second process hits every artifact class it consults (no
+  table rebuild, no serial walk, no ``cc`` invocation) and returns
+  bit-identical results to the cold one. ``--engine py|c`` crosses the
+  check over both engines (mmap'd tables must be transparent to each).
+
+Used by CI (cache-smoke job) and by ``bench_sim`` to record the
+``paper+cachecold`` / ``paper+cachehit`` rows.
+
+    PYTHONPATH=src python -m benchmarks.cache_smoke [--engine c|py]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import tempfile
+import time
+
+
+def run_child(workload: str, scale: str, scheduler: str, threads: int,
+              seed: int) -> dict:
+    """One fresh-process sample (see module docstring, child mode)."""
+    t_start = time.perf_counter()
+    from repro.core import topology
+    from repro.core.sim import Machine, bots, get_cache
+    from repro.core.sim import _csim
+    from repro.core.sim.runtime import _select_engine
+    import_s = time.perf_counter() - t_start
+
+    t0 = time.perf_counter()
+    wl = bots.make(workload, scale)
+    make_s = time.perf_counter() - t0
+    machine = Machine(topology.sunfire_x4600())
+    ctx = machine.context(threads, binding="paper")
+    t0 = time.perf_counter()
+    r = machine.run(wl, scheduler, seed=seed, context=ctx)
+    run_s = time.perf_counter() - t0
+
+    cache = get_cache()
+    return dict(
+        workload=workload, scale=scale, scheduler=scheduler,
+        threads=threads, seed=seed,
+        engine=_select_engine(), tasks=int(wl.table.n),
+        import_s=round(import_s, 6), make_s=round(make_s, 6),
+        run_s=round(run_s, 6),
+        first_result_s=round(make_s + run_s, 6),
+        makespan=r.makespan, speedup=r.speedup, steals=r.steals,
+        remote_work_fraction=r.remote_work_fraction,
+        compiled_c_kernel=_csim.compiled_this_process,
+        cache=None if cache is None else cache.stats())
+
+
+def spawn_child(cache_root: str, engine: str, workload: str, scale: str,
+                scheduler: str, threads: int, seed: int) -> dict:
+    env = dict(os.environ, REPRO_SIM_CACHE=cache_root,
+               REPRO_SIM_ENGINE=engine)
+    proc = subprocess.run(
+        [sys.executable, "-m", "benchmarks.cache_smoke", "--child",
+         "--workload", workload, "--scale", scale,
+         "--scheduler", scheduler, "--threads", str(threads),
+         "--seed", str(seed)],
+        env=env, capture_output=True, text=True, timeout=600)
+    if proc.returncode != 0:
+        raise RuntimeError(
+            f"cache-smoke child failed (rc={proc.returncode}):\n"
+            f"{proc.stdout}\n{proc.stderr}")
+    return json.loads(proc.stdout.splitlines()[-1])
+
+
+def smoke(engine: str, workload: str = "fft", scale: str = "paper",
+          scheduler: str = "wf", threads: int = 16, seed: int = 0,
+          verbose: bool = True) -> "tuple[dict, dict]":
+    """Cold + warm child under a fresh cache root; asserts the contract.
+
+    Returns ``(cold, warm)`` child records for callers (bench_sim) that
+    want the timings.
+    """
+    with tempfile.TemporaryDirectory(prefix="repro-sim-smoke-") as root:
+        cold = spawn_child(root, engine, workload, scale, scheduler,
+                          threads, seed)
+        warm = spawn_child(root, engine, workload, scale, scheduler,
+                          threads, seed)
+
+    assert cold["cache"] is not None, "cache unexpectedly disabled"
+    assert cold["cache"]["hits"] == {}, \
+        f"cold process hit a fresh cache: {cold['cache']}"
+    misses = cold["cache"]["misses"]
+    assert misses.get("tables") and misses.get("serial"), \
+        f"cold process consulted no table/serial artifacts: {misses}"
+
+    hits = warm["cache"]["hits"]
+    assert warm["cache"]["misses"] == {}, \
+        f"warm process missed: {warm['cache']}"
+    assert hits.get("tables") and hits.get("serial"), \
+        f"warm process did not hit table+serial artifacts: {hits}"
+    if engine == "c":
+        assert cold["compiled_c_kernel"] or warm["engine"] != "c", \
+            "cold process reused a kernel it should have had to build"
+        assert not warm["compiled_c_kernel"], \
+            "warm process invoked the C compiler"
+    for rec in (cold, warm):
+        assert rec["engine"] == engine, \
+            f"requested engine {engine!r}, got {rec['engine']!r}"
+
+    # bit-identical results: cached artifacts must be transparent
+    for field in ("makespan", "speedup", "steals",
+                  "remote_work_fraction", "tasks"):
+        assert cold[field] == warm[field], \
+            f"{field}: cold={cold[field]!r} != warm={warm[field]!r}"
+
+    if verbose:
+        print(f"[{engine}] cold: make={cold['make_s']:.3f}s "
+              f"run={cold['run_s']:.3f}s "
+              f"(compiled_cc={cold['compiled_c_kernel']})")
+        print(f"[{engine}] warm: make={warm['make_s']:.3f}s "
+              f"run={warm['run_s']:.3f}s "
+              f"first_result={warm['first_result_s']:.3f}s "
+              f"hits={hits}")
+        print(f"[{engine}] results identical "
+              f"(makespan={cold['makespan']!r}) — PASS")
+    return cold, warm
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--child", action="store_true",
+                    help="run one in-process sample and print JSON")
+    ap.add_argument("--engine", default="c", choices=("c", "py"),
+                    help="driver mode: engine to cross the smoke over")
+    ap.add_argument("--workload", default="fft")
+    ap.add_argument("--scale", default="paper")
+    ap.add_argument("--scheduler", default="wf")
+    ap.add_argument("--threads", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    if args.child:
+        print(json.dumps(run_child(args.workload, args.scale,
+                                   args.scheduler, args.threads,
+                                   args.seed)))
+        return
+    smoke(args.engine, args.workload, args.scale, args.scheduler,
+          args.threads, args.seed)
+
+
+if __name__ == "__main__":
+    main()

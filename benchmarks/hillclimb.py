@@ -162,6 +162,8 @@ def cell_sim():
               f"{r.remote_work_fraction * 100:8.2f} {r.steals:8d} "
               f"{r.queue_wait:10.1f}")
     print(f"[store] {store!r}")
+    if m.compile_cache is not None:
+        print(f"[compile-cache] {m.compile_cache!r}")
     store.close()
     return rows
 

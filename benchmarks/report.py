@@ -1,5 +1,6 @@
 """Generate the data-driven sections of EXPERIMENTS.md (§Dry-run tables,
-§Roofline table) from artifacts/dryrun + artifacts/roofline.json.
+§Roofline table, §Sim-perf table) from artifacts/dryrun +
+artifacts/roofline.json + BENCH_sim.json.
 
     PYTHONPATH=src python -m benchmarks.report > artifacts/report.md
 """
@@ -68,6 +69,37 @@ def collective_breakdown(cells) -> str:
     return "\n".join(out)
 
 
+def _fmt(value, spec: str = "") -> str:
+    """Format one metric cell; null metrics (e.g. a batch row's
+    undefined speedup) render as an em-dash instead of a fake number."""
+    if value is None:
+        return "—"
+    return format(value, spec)
+
+
+def sim_bench_table(path: "str | None" = None) -> str:
+    """BENCH_sim.json results as markdown (null-safe, see _fmt)."""
+    path = path or os.path.join(os.path.dirname(__file__), "..",
+                                "BENCH_sim.json")
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, ValueError):
+        return "(no BENCH_sim.json)"
+    out = ["| workload | scale | scheduler | engine | build_s | cold_s | "
+           "warm_s | tasks/s | speedup | steals |",
+           "|---|---|---|---|---|---|---|---|---|---|"]
+    for r in doc.get("results", []):
+        out.append(
+            f"| {r['workload']} | {r['scale']} | {r['scheduler']} | "
+            f"{r['engine']} | {_fmt(r.get('build_s'), '.3f')} | "
+            f"{_fmt(r.get('cold_s'), '.4f')} | "
+            f"{_fmt(r.get('warm_s'), '.4f')} | "
+            f"{_fmt(r.get('tasks_per_s'), '.0f')} | "
+            f"{_fmt(r.get('speedup'))} | {_fmt(r.get('steals'))} |")
+    return "\n".join(out)
+
+
 def main():
     cells = load_cells()
     rows = rf.analyze()
@@ -82,6 +114,8 @@ def main():
     print(collective_breakdown(cells))
     print("\n## §Roofline (generated)\n")
     print(rf.markdown_table(rows))
+    print("\n## §Sim perf (generated)\n")
+    print(sim_bench_table())
 
 
 if __name__ == "__main__":

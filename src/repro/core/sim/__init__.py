@@ -13,4 +13,7 @@ from .sweep import (SweepConfig, SweepPlan, CellError, CellTimeout,
                     WorkerDied, RetryPolicy, run_sweep,
                     Stat, CellStats, aggregate)
 from .store import ResultStore, cell_key, workload_fingerprint
-from . import bots, context, faults, machine, policy, store, sweep
+from .compile_cache import (CompileCache, get_cache, reset_cache,
+                            cache_root)
+from . import (bots, compile_cache, context, faults, machine, policy,
+               store, sweep)

@@ -1,10 +1,21 @@
 """Build/load machinery for the C simulation kernel (_csim.c).
 
-The kernel is compiled on first use with the system C compiler into a
-cache directory keyed by the source hash, then loaded via ctypes. When
-no compiler (or loading) is available the caller falls back to the
-pure-Python engine — same results, slower. Set ``REPRO_SIM_ENGINE`` to
-``py`` / ``c`` / ``auto`` (default) to force a path.
+The kernel is compiled on first use with the system C compiler into the
+persistent compile cache (see :mod:`~.compile_cache`), keyed by (source
+hash, compiler version, flags) — only the first process on a machine
+ever invokes the compiler; every later one dlopens the cached ``.so``
+(the compiler-version probe itself is persisted, so a warm process
+spawns nothing). With ``REPRO_SIM_CACHE=0`` artifacts go to a
+per-process temp dir instead. When no compiler (or loading) is
+available the caller falls back to the pure-Python engine — same
+results, slower. Set ``REPRO_SIM_ENGINE`` to ``py`` / ``c`` / ``auto``
+(default) to force a path.
+
+Concurrent processes racing the build are safe: each compiles into a
+private ``mkstemp`` file and atomically ``os.replace``\\ s it onto the
+keyed artifact path (equal keys ⇒ equal content, last rename wins with
+identical bytes); a builder whose compile *fails* while the artifact
+exists reuses the winner's output.
 
 IMPORTANT: ``-ffp-contract=off`` is required — FMA contraction would
 change float results and break bit-parity with the Python engine.
@@ -14,6 +25,7 @@ from __future__ import annotations
 
 import ctypes as ct
 import hashlib
+import json
 import os
 import shutil
 import subprocess
@@ -29,49 +41,131 @@ _lib = None
 _load_attempted = False
 load_error: str | None = None
 
+# True when *this* process ran the compiler (vs dlopening a cached
+# artifact) — the cross-process cache smoke asserts a warm process
+# keeps it False.
+compiled_this_process = False
+
 # True once loaded with the pthread worker pool compiled in; a toolchain
 # without pthread support falls back to a -DCSIM_NO_THREADS build and
 # run_batch degrades to workers=1 with a one-time warning.
 threads_supported = False
 _warned_no_threads = False
 
+_tmp_dir: str | None = None      # per-process fallback when caching is off
+_cc_memo: dict = {}              # cc path -> version string, per process
+
 
 def reset() -> None:
     """Forget a previous load attempt (e.g. the toolchain changed)."""
     global _lib, _load_attempted, load_error
-    global threads_supported, _warned_no_threads
+    global threads_supported, _warned_no_threads, compiled_this_process
     _lib = None
     _load_attempted = False
     load_error = None
     threads_supported = False
     _warned_no_threads = False
+    compiled_this_process = False
 
 _f64p = np.ctypeslib.ndpointer(np.float64, flags="C_CONTIGUOUS")
 _i64p = np.ctypeslib.ndpointer(np.int64, flags="C_CONTIGUOUS")
 _u32p = np.ctypeslib.ndpointer(np.uint32, flags="C_CONTIGUOUS")
 
 
-def _cache_dir() -> str:
-    base = os.environ.get("XDG_CACHE_HOME") or os.path.join(
-        os.path.expanduser("~"), ".cache")
-    return os.path.join(base, "repro-sim")
+def _csim_dir() -> str:
+    """Artifact directory for compiled kernels.
+
+    ``<cache root>/csim`` under the persistent compile cache; when
+    caching is disabled (``REPRO_SIM_CACHE=0``) a per-process temp dir —
+    disabled means no cross-process persistence at all.
+    """
+    from .compile_cache import cache_root
+    root = cache_root()
+    if root is not None:
+        return os.path.join(root, "csim")
+    global _tmp_dir
+    if _tmp_dir is None:
+        _tmp_dir = tempfile.mkdtemp(prefix="repro-sim-csim-")
+    return _tmp_dir
 
 
-def _build_one(flags: list[str], src: bytes) -> str:
-    tag = hashlib.sha1(src + " ".join(flags).encode()).hexdigest()[:16]
-    out = os.path.join(_cache_dir(), f"csim_{tag}.so")
+def _resolve_cc() -> str | None:
+    env = os.environ.get("CC")
+    if env:
+        return shutil.which(env) or env
+    return shutil.which("cc") or shutil.which("gcc")
+
+
+def _cc_version(cc: str, cache_dir: str) -> str:
+    """Compiler identity (first ``--version`` line) for the artifact key.
+
+    Memoized per process and persisted keyed by the compiler binary's
+    (path, mtime, size) — a warm process reads the probe file instead of
+    spawning the compiler, so a cache hit is subprocess-free. A swapped
+    or upgraded compiler changes the probe key *and* re-probes, which
+    rotates the ``.so`` tag.
+    """
+    ver = _cc_memo.get(cc)
+    if ver is not None:
+        return ver
+    probe = None
+    try:
+        st = os.stat(cc)
+        ident = hashlib.sha1(
+            f"{cc}:{st.st_mtime_ns}:{st.st_size}".encode()).hexdigest()[:16]
+        probe = os.path.join(cache_dir, f"ccprobe_{ident}.json")
+        with open(probe, "r", encoding="utf-8") as f:
+            ver = str(json.load(f)["version"])
+        _cc_memo[cc] = ver
+        return ver
+    except (OSError, ValueError, KeyError, TypeError):
+        pass
+    try:
+        r = subprocess.run([cc, "--version"], capture_output=True,
+                           timeout=30)
+        lines = (r.stdout or r.stderr).decode("utf-8",
+                                              "replace").splitlines()
+        ver = lines[0].strip() if lines else "unknown"
+    except (OSError, subprocess.SubprocessError):
+        ver = "unknown"
+    _cc_memo[cc] = ver
+    if probe is not None:
+        try:
+            os.makedirs(cache_dir, exist_ok=True)
+            fd, tmp = tempfile.mkstemp(dir=cache_dir, suffix=".json")
+            with os.fdopen(fd, "w", encoding="utf-8") as f:
+                json.dump({"cc": cc, "version": ver}, f)
+            os.replace(tmp, probe)
+        except OSError:
+            pass
+    return ver
+
+
+def _build_one(flags: list[str], src: bytes, cc: "str | None",
+               cc_ver: str, cache_dir: str) -> str:
+    global compiled_this_process
+    tag = hashlib.sha1(src + " ".join(flags).encode()
+                       + cc_ver.encode()).hexdigest()[:16]
+    out = os.path.join(cache_dir, f"csim_{tag}.so")
     if os.path.exists(out):
         return out
-    cc = os.environ.get("CC") or shutil.which("cc") or shutil.which("gcc")
     if cc is None:
         raise RuntimeError("no C compiler found")
-    os.makedirs(_cache_dir(), exist_ok=True)
-    fd, tmp = tempfile.mkstemp(suffix=".so", dir=_cache_dir())
+    os.makedirs(cache_dir, exist_ok=True)
+    fd, tmp = tempfile.mkstemp(suffix=".so", dir=cache_dir)
     os.close(fd)
     try:
-        subprocess.run([cc, *flags, _SRC, "-o", tmp],
-                       check=True, capture_output=True, timeout=120)
+        try:
+            subprocess.run([cc, *flags, _SRC, "-o", tmp],
+                           check=True, capture_output=True, timeout=120)
+        except (subprocess.SubprocessError, OSError):
+            # a concurrent builder may have published the artifact while
+            # our compile was failing — the loser reuses the winner's
+            if os.path.exists(out):
+                return out
+            raise
         os.replace(tmp, out)  # atomic: concurrent builders race safely
+        compiled_this_process = True
     finally:
         if os.path.exists(tmp):
             os.unlink(tmp)
@@ -79,7 +173,7 @@ def _build_one(flags: list[str], src: bytes) -> str:
 
 
 def _build() -> tuple[str, bool]:
-    """Compile the kernel; returns (path, threaded).
+    """Compile (or reuse) the kernel; returns (path, threaded).
 
     Tries the pthread worker-pool build first; a toolchain that rejects
     ``-pthread`` gets a ``-DCSIM_NO_THREADS`` build (serial batch loop,
@@ -87,10 +181,15 @@ def _build() -> tuple[str, bool]:
     """
     with open(_SRC, "rb") as f:
         src = f.read()
+    cache_dir = _csim_dir()
+    cc = _resolve_cc()
+    cc_ver = _cc_version(cc, cache_dir) if cc is not None else "none"
     try:
-        return _build_one(_CFLAGS + ["-pthread"], src), True
+        return _build_one(_CFLAGS + ["-pthread"], src, cc, cc_ver,
+                          cache_dir), True
     except subprocess.CalledProcessError:
-        return _build_one(_CFLAGS + ["-DCSIM_NO_THREADS"], src), False
+        return _build_one(_CFLAGS + ["-DCSIM_NO_THREADS"], src, cc,
+                          cc_ver, cache_dir), False
 
 
 _uptr = np.ctypeslib.ndpointer(np.uintp, flags="C_CONTIGUOUS")

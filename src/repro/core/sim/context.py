@@ -128,8 +128,24 @@ class BindingSpec:
         key = (self, num_threads, seed if self.kind == "paper" else 0)
         cores = cache.get(key)
         if cores is None:
+            # the paper binding's priority allocation is the one
+            # non-trivial lowering — persist it across processes keyed
+            # by (topology fingerprint, spec, T, seed)
+            pcache = pkey = None
+            if self.kind == "paper":
+                from .compile_cache import digest_key, get_cache
+                pcache = get_cache()
+                if pcache is not None:
+                    pkey = digest_key("binding", topo.fingerprint(),
+                                      repr(self), num_threads, seed)
+                    stored = pcache.get_int_tuple("contexts", pkey)
+                    if stored is not None and len(stored) == num_threads:
+                        cache[key] = stored
+                        return stored
             cores = self._lower_uncached(topo, num_threads, seed)
             cache[key] = cores
+            if pcache is not None:
+                pcache.put_int_tuple("contexts", pkey, cores)
         return cores
 
     def _lower_uncached(self, topo: Topology, T: int, seed: int) -> tuple:
@@ -230,10 +246,22 @@ class PlacementSpec:
         key = (self, start)
         nodes = cache.get(key)
         if nodes is None:
+            from .compile_cache import digest_key, get_cache
+            pcache = get_cache()
+            pkey = None
+            if pcache is not None:
+                pkey = digest_key("placement", topo.fingerprint(),
+                                  repr(self), start)
+                stored = pcache.get_int_tuple("contexts", pkey)
+                if stored is not None and len(stored) == self.spill_nodes:
+                    cache[key] = stored
+                    return stored
             pr = priorities(topo) if self.ties == "priority" else None
             nodes = tuple(first_touch_spill(topo, start, self.spill_nodes,
                                             pr))
             cache[key] = nodes
+            if pcache is not None:
+                pcache.put_int_tuple("contexts", pkey, nodes)
         return nodes
 
 

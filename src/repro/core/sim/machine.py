@@ -170,6 +170,17 @@ class Machine:
                 f"{self.topo.num_nodes} nodes, "
                 f"{len(self._contexts)} cached contexts)")
 
+    @property
+    def compile_cache(self):
+        """The process-wide persistent compile cache handle (or None).
+
+        Every machine — and every grid cell run through one — shares
+        this handle, so its ``stats()`` aggregate table/serial/context
+        hits across a whole campaign.
+        """
+        from .compile_cache import get_cache
+        return get_cache()
+
     # ------------------------------------------------------------------
     def context(self, threads: Optional[int] = None, *,
                 binding="paper", placement="first_touch",

@@ -214,7 +214,24 @@ def compile_victim_plan(spec: SchedulerSpec, topo: Topology,
     key = (spec.victim, cores)
     plan = cache.get(key)
     if plan is None:
-        plan = VictimPlan(len(cores), _victim_groups(spec.victim, topo, cores))
+        # persist the raw nesting across processes keyed by (topology
+        # fingerprint, victim policy, binding); VictimPlan's derived
+        # forms (py_groups/static_order/flat) recompute deterministically
+        from .compile_cache import digest_key, get_cache
+        pcache = get_cache()
+        pkey = None
+        groups = None
+        if pcache is not None:
+            pkey = digest_key("victim_plan", topo.fingerprint(),
+                              spec.victim, cores)
+            groups = pcache.get_victim_groups(pkey)
+            if groups is not None and len(groups) != len(cores):
+                groups = None
+        if groups is None:
+            groups = _victim_groups(spec.victim, topo, cores)
+            if pcache is not None:
+                pcache.put_victim_groups(pkey, groups)
+        plan = VictimPlan(len(cores), groups)
         cache[key] = plan
     return plan
 

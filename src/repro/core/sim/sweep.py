@@ -11,6 +11,11 @@ table) — and hands the whole batch to the engine in one call. On the C
 path that is a single ``sim_run_batch`` invocation: the kernel iterates
 configs back to back without re-crossing into Python per run.
 
+All of those per-cell compile products also persist across *processes*
+through the one shared :func:`~.compile_cache.get_cache` handle — a
+re-run grid mmaps its tables, replays its serial references, and loads
+its victim plans from disk before the first cell simulates.
+
 Results are bit-identical to the per-call loop: each config gets its own
 ``RandomState(seed)`` stream and the engines are untouched — batching
 changes *when* work is dispatched, never *what* runs.

@@ -116,6 +116,42 @@ class TaskTable:
             )
         return self._lists
 
+    # every array a table consists of, including the derived CSR
+    # indices and profile classes — persisting the derived arrays too
+    # lets :meth:`restore` skip the np.unique class dedup (~100 ms at
+    # paper scale) and keep mmap'd blobs untouched.
+    ARRAY_FIELDS = ("work_pre", "work_post", "f_root", "f_parent",
+                    "first_child", "num_children", "first_post",
+                    "num_post", "parent", "cls", "cls_f_root",
+                    "cls_f_parent")
+
+    def saved_arrays(self) -> dict:
+        """All defining + derived arrays, keyed by field name."""
+        return {name: getattr(self, name) for name in self.ARRAY_FIELDS}
+
+    @classmethod
+    def restore(cls, arrays: dict,
+                fingerprint: "str | None" = None) -> "TaskTable":
+        """Rebuild a table from :meth:`saved_arrays` output *as is*.
+
+        Trusted-restore path for the compile cache: the arrays (often
+        read-only memory maps) are adopted without the ``__init__``
+        normalization or class recompute, and a known fingerprint is
+        pre-seeded so a restored paper-scale table never hashes its
+        tens of MB just to be identified.
+        """
+        missing = [f for f in cls.ARRAY_FIELDS if f not in arrays]
+        if missing:
+            raise ValueError(f"table restore missing arrays: {missing}")
+        self = object.__new__(cls)
+        for name in cls.ARRAY_FIELDS:
+            setattr(self, name, arrays[name])
+        self.n = int(self.work_pre.shape[0])
+        self._serial_cache = {}
+        self._lists = None
+        self._fingerprint = fingerprint
+        return self
+
 
 def table_from_arrays(work_pre, work_post, f_root, f_parent,
                       num_children, num_post) -> TaskTable:

@@ -1,0 +1,27 @@
+import os
+import tempfile
+
+import pytest
+
+
+@pytest.fixture(scope="session", autouse=True)
+def _hermetic_compile_cache():
+    """Point the persistent compile cache at a per-session temp dir.
+
+    Test runs must neither read nor pollute the user's
+    ``~/.cache/repro-sim`` (a stale artifact there could mask a bug; a
+    test-built one could leak out). An explicitly exported
+    ``REPRO_SIM_CACHE`` — including ``0`` — is honored as-is.
+    """
+    if "REPRO_SIM_CACHE" in os.environ:
+        yield
+        return
+    with tempfile.TemporaryDirectory(prefix="repro-sim-tests-") as tmp:
+        os.environ["REPRO_SIM_CACHE"] = tmp
+        from repro.core.sim import reset_cache
+        reset_cache()
+        try:
+            yield
+        finally:
+            os.environ.pop("REPRO_SIM_CACHE", None)
+            reset_cache()

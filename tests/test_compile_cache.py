@@ -1,0 +1,363 @@
+"""Persistent compile-cache correctness (see sim/compile_cache.py).
+
+Covers the ISSUE-9 contract: key sensitivity (any input that changes
+the computation must miss), corruption tolerance (torn/scribbled
+artifacts rebuild with a one-time warning, never wrong results),
+mmap-restored tables bit-identical to freshly built ones on both
+engines, clean ``REPRO_SIM_CACHE=0`` bypass, and the concurrent-build
+hardening of the ``_csim`` shared object.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+import subprocess
+
+import numpy as np
+import pytest
+
+from repro.core import topology
+from repro.core.sim import (Machine, SimParams, bots, compile_cache,
+                            get_cache, reset_cache, reset_engine_cache)
+from repro.core.sim import _csim
+from repro.core.sim.runtime import Workload, ensure_table, serial_time
+from repro.core.sim.table import TaskTable
+
+
+@pytest.fixture()
+def cache_root(tmp_path, monkeypatch):
+    """A fresh cache root per test (and a clean handle)."""
+    root = tmp_path / "cache"
+    monkeypatch.setenv("REPRO_SIM_CACHE", str(root))
+    reset_cache()
+    yield str(root)
+    reset_cache()
+
+
+def _engines():
+    return ["py"] if _csim.load() is None else ["py", "c"]
+
+
+def _use_engine(monkeypatch, name):
+    monkeypatch.setenv("REPRO_SIM_ENGINE", name)
+    reset_engine_cache()
+
+
+# ----------------------------------------------------------------------
+# key sensitivity
+# ----------------------------------------------------------------------
+
+def test_workload_key_sensitivity():
+    k = bots.workload_cache_key
+    assert k("fft", "medium") == k("fft", "medium")
+    assert k("fft", "medium") != k("fft", "large")
+    assert k("fft", "medium") != k("sort", "medium")
+
+
+def test_workload_key_tracks_builder_source(monkeypatch):
+    base = bots.workload_cache_key("fft", "medium")
+    monkeypatch.setattr(compile_cache, "source_fingerprint",
+                        lambda *m: "edited-builder-source")
+    assert bots.workload_cache_key("fft", "medium") != base
+
+
+def _serial_keys(root):
+    d = os.path.join(root, "serial")
+    return set(os.listdir(d)) if os.path.isdir(d) else set()
+
+
+def test_serial_key_sensitivity(cache_root):
+    """Changing topology, workload, µ, or λ each mints a new artifact."""
+    wl = bots.fft(n=1 << 8, cutoff=4)
+    topo = topology.sunfire_x4600()
+    n0 = len(_serial_keys(cache_root))
+    serial_time(topo, wl, 0, None, SimParams())
+    assert len(_serial_keys(cache_root)) == n0 + 1
+    # different topology (fresh table so the in-memory per-table cache
+    # can't short-circuit; content-equal table → same table fingerprint,
+    # different topology fingerprint must still miss)
+    serial_time(topology.uma(16), bots.fft(n=1 << 8, cutoff=4), 0, None,
+                SimParams())
+    assert len(_serial_keys(cache_root)) == n0 + 2
+    # different µ (same table)
+    wl_mu = Workload(wl.name, wl.root, wl.mem_intensity * 2.0,
+                     table=ensure_table(wl))
+    serial_time(topo, wl_mu, 0, None, SimParams())
+    assert len(_serial_keys(cache_root)) == n0 + 3
+    # different λ
+    serial_time(topo, wl, 0, None, SimParams(hop_lambda=0.7))
+    assert len(_serial_keys(cache_root)) == n0 + 4
+    # different table
+    serial_time(topo, bots.sort(n=1 << 8, cutoff=4), 0, None, SimParams())
+    assert len(_serial_keys(cache_root)) == n0 + 5
+    # replaying any of them is a pure hit — no new artifacts
+    serial_time(topology.sunfire_x4600(), bots.fft(n=1 << 8, cutoff=4),
+                0, None, SimParams())
+    assert len(_serial_keys(cache_root)) == n0 + 5
+
+
+# ----------------------------------------------------------------------
+# round-trips
+# ----------------------------------------------------------------------
+
+def test_make_round_trip_is_mmap_backed_and_identical(cache_root):
+    built = bots.make("fft", "medium")        # miss → build + store
+    restored = bots.make("fft", "medium")     # hit → mmap restore
+    assert built is not restored
+    assert restored.root is None
+    t0, t1 = ensure_table(built), ensure_table(restored)
+    assert isinstance(t1.work_pre, np.memmap)
+    assert not t1.work_pre.flags["WRITEABLE"]
+    assert t1.fingerprint() == t0.fingerprint()
+    for name in TaskTable.ARRAY_FIELDS:
+        np.testing.assert_array_equal(getattr(t0, name),
+                                      getattr(t1, name))
+    assert get_cache().hit_count("tables") == 1
+
+
+def test_serial_value_round_trips_exactly(cache_root):
+    wl = bots.fft(n=1 << 10, cutoff=8)
+    topo = topology.sunfire_x4600()
+    fresh = serial_time(topo, wl, 0, None, SimParams())
+    # same inputs, fresh in-memory state → the persisted value, bit-exact
+    wl2 = bots.fft(n=1 << 10, cutoff=8)
+    replayed = serial_time(topo, wl2, 0, None, SimParams())
+    assert replayed == fresh
+    assert get_cache().hit_count("serial") == 1
+
+
+def test_context_and_victim_plan_round_trip(cache_root):
+    m1 = Machine(topology.sunfire_x4600())
+    r1 = m1.run(bots.fft(n=1 << 10, cutoff=8), "dfwsrpt", seed=0,
+                threads=16, binding="paper", placement="spill:2")
+    # a fresh, equal-content topology (new object → empty lazy caches)
+    # must hit the persisted binding/placement/victim-plan artifacts
+    reset_cache()
+    m2 = Machine(topology.sunfire_x4600())
+    r2 = m2.run(bots.fft(n=1 << 10, cutoff=8), "dfwsrpt", seed=0,
+                threads=16, binding="paper", placement="spill:2")
+    assert r1 == r2
+    stats = get_cache().stats()
+    assert stats["hits"].get("contexts") and stats["hits"].get("plans")
+    assert stats["corrupt"] == {}
+
+
+def test_mmap_tables_bit_identical_on_both_engines(cache_root,
+                                                   monkeypatch):
+    bots.make("fft", "medium")                 # populate
+    restored = bots.make("fft", "medium")      # mmap-backed hit
+    assert isinstance(ensure_table(restored).work_pre, np.memmap)
+    monkeypatch.setenv("REPRO_SIM_CACHE", "0")  # fresh build, no cache
+    reset_cache()
+    fresh = bots.make("fft", "medium")
+    assert not isinstance(ensure_table(fresh).work_pre, np.memmap)
+    for eng in _engines():
+        _use_engine(monkeypatch, eng)
+        m = Machine(topology.sunfire_x4600())
+        r_fresh = m.run(fresh, "dfwsrpt", seed=3, threads=16,
+                        binding="paper", placement="spill:2")
+        r_mmap = m.run(restored, "dfwsrpt", seed=3, threads=16,
+                       binding="paper", placement="spill:2")
+        assert r_fresh == r_mmap, eng
+    reset_engine_cache()
+
+
+# ----------------------------------------------------------------------
+# corruption tolerance
+# ----------------------------------------------------------------------
+
+def test_torn_table_artifact_rebuilds_with_warning(cache_root):
+    bots.make("fft", "medium")
+    expected = ensure_table(bots.make("fft", "medium"))
+    blobs = glob.glob(os.path.join(cache_root, "tables", "*", "*.npy"))
+    assert blobs
+    with open(blobs[0], "r+b") as f:           # tear: truncate mid-data
+        f.truncate(os.path.getsize(blobs[0]) // 2)
+    reset_cache()
+    with pytest.warns(RuntimeWarning, match="compile cache"):
+        rebuilt = bots.make("fft", "medium")
+    tbl = ensure_table(rebuilt)
+    assert tbl.fingerprint() == expected.fingerprint()
+    stats = get_cache().stats()
+    assert stats["corrupt"].get("tables") == 1
+    # the artifact was re-stored: next consult is a clean hit
+    assert ensure_table(bots.make("fft", "medium")).fingerprint() \
+        == expected.fingerprint()
+    assert get_cache().stats()["corrupt"].get("tables") == 1
+
+
+def test_scribbled_manifest_rebuilds(cache_root):
+    bots.make("fft", "medium")
+    manifests = glob.glob(os.path.join(cache_root, "tables", "*",
+                                       "manifest.json"))
+    assert manifests
+    with open(manifests[0], "w") as f:
+        f.write('{"format": "repro-sim-compile-cache", "version": 1, '
+                '"payload": {"arrays": {}, "meta": {}}, '
+                '"checksum": "0000"}')
+    reset_cache()
+    with pytest.warns(RuntimeWarning, match="checksum"):
+        wl = bots.make("fft", "medium")
+    assert ensure_table(wl).n > 0
+
+
+def test_corrupt_serial_artifact_rebuilds(cache_root):
+    wl = bots.fft(n=1 << 10, cutoff=8)
+    topo = topology.sunfire_x4600()
+    fresh = serial_time(topo, wl, 0, None, SimParams())
+    files = glob.glob(os.path.join(cache_root, "serial", "*.json"))
+    assert files
+    with open(files[0], "w") as f:
+        f.write("{ torn json")
+    reset_cache()
+    with pytest.warns(RuntimeWarning, match="compile cache"):
+        replayed = serial_time(topo, bots.fft(n=1 << 10, cutoff=8), 0,
+                               None, SimParams())
+    assert replayed == fresh
+
+
+def test_version_mismatch_is_discarded(cache_root):
+    cache = get_cache()
+    cache.put_json("serial", "k1", {"serial": 1.5})
+    path = cache._json_path("serial", "k1")
+    with open(path) as f:
+        doc = json.load(f)
+    doc["version"] = 999
+    with open(path, "w") as f:
+        json.dump(doc, f)
+    with pytest.warns(RuntimeWarning, match="version mismatch"):
+        assert cache.get_serial("k1") is None
+    # discarded on disk → a fresh put works and hits again
+    cache.put_serial("k1", 2.5)
+    assert cache.get_serial("k1") == 2.5
+
+
+# ----------------------------------------------------------------------
+# disable switch
+# ----------------------------------------------------------------------
+
+def test_cache_disabled_bypasses_cleanly(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_SIM_CACHE", "0")
+    reset_cache()
+    assert get_cache() is None
+    assert compile_cache.cache_root() is None
+    wl = bots.make("fft", "medium")
+    assert not isinstance(ensure_table(wl).work_pre, np.memmap)
+    r = Machine(topology.sunfire_x4600()).run(
+        wl, "wf", seed=0, threads=8, binding="paper")
+    assert r.makespan > 0
+    reset_cache()
+
+
+def test_env_change_re_resolves_handle(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_SIM_CACHE", str(tmp_path / "a"))
+    c1 = get_cache()
+    monkeypatch.setenv("REPRO_SIM_CACHE", str(tmp_path / "b"))
+    c2 = get_cache()
+    assert c1 is not c2 and c1.root != c2.root
+    monkeypatch.setenv("REPRO_SIM_CACHE", "0")
+    assert get_cache() is None
+    reset_cache()
+
+
+# ----------------------------------------------------------------------
+# _csim artifact hardening
+# ----------------------------------------------------------------------
+
+def test_csim_artifact_reused_without_compiler(cache_root, monkeypatch):
+    if _csim.load() is None:
+        pytest.skip("no C toolchain")
+    _csim.reset()
+    try:
+        assert _csim.load() is not None
+        assert _csim.compiled_this_process   # fresh root → real compile
+        so = glob.glob(os.path.join(cache_root, "csim", "csim_*.so"))
+        assert so, "kernel not placed under the cache root"
+        # a second load in the same toolchain state must dlopen the
+        # cached artifact without ever invoking the compiler
+        _csim.reset()
+
+        def _no_compiles(*a, **k):
+            raise AssertionError("compiler invoked on a warm cache")
+
+        monkeypatch.setattr(subprocess, "run", _no_compiles)
+        assert _csim.load() is not None
+        assert not _csim.compiled_this_process
+    finally:
+        monkeypatch.undo()
+        _csim.reset()
+        _csim.load()
+
+
+def test_csim_loser_reuses_winners_artifact(cache_root, monkeypatch):
+    if _csim.load() is None:
+        pytest.skip("no C toolchain")
+    _csim.reset()
+    try:
+        assert _csim.load() is not None      # publish the artifact
+        _csim.reset()
+        real_run = subprocess.run
+
+        def _losing_compile(cmd, *a, **k):
+            if any(str(c).endswith("_csim.c") for c in cmd):
+                # simulate losing the build race: our compile dies, but
+                # the winner's artifact is already on the keyed path
+                raise subprocess.CalledProcessError(1, cmd)
+            return real_run(cmd, *a, **k)
+
+        monkeypatch.setattr(subprocess, "run", _losing_compile)
+        assert _csim.load() is not None
+        assert not _csim.compiled_this_process
+    finally:
+        monkeypatch.undo()
+        _csim.reset()
+        _csim.load()
+
+
+def test_csim_tempdir_fallback_when_disabled(monkeypatch):
+    monkeypatch.setenv("REPRO_SIM_CACHE", "0")
+    reset_cache()
+    d = _csim._csim_dir()
+    assert "repro-sim-csim-" in d and os.path.isdir(d)
+    reset_cache()
+
+
+# ----------------------------------------------------------------------
+# raw artifact layer
+# ----------------------------------------------------------------------
+
+def test_put_get_arrays_verifies_structure(cache_root):
+    cache = get_cache()
+    arrays = dict(a=np.arange(5, dtype=np.int64),
+                  b=np.linspace(0, 1, 5))
+    cache.put_arrays("tables", "k", arrays, {"note": "x"})
+    got, meta = cache.get_arrays("tables", "k")
+    assert meta == {"note": "x"}
+    np.testing.assert_array_equal(got["a"], arrays["a"])
+    np.testing.assert_array_equal(got["b"], arrays["b"])
+    # scribble one blob's bytes (size/dtype/shape intact): the data
+    # checksum catches it (small artifact → eager verification)
+    path = os.path.join(cache_root, "tables", "k", "a.npy")
+    blob = np.load(path)
+    blob[0] = 999
+    with open(path, "wb") as f:
+        np.save(f, blob)
+    with pytest.warns(RuntimeWarning, match="data checksum"):
+        assert cache.get_arrays("tables", "k") is None
+
+
+def test_repeated_puts_are_safe(cache_root):
+    """Racing/repeated writers under one key never corrupt an artifact
+    (equal keys hold equal content by construction)."""
+    cache = get_cache()
+    cache.put_json("serial", "k", {"serial": 1.0})
+    cache.put_json("serial", "k", {"serial": 1.0})
+    assert cache.get_serial("k") == 1.0
+    a1 = dict(x=np.arange(3, dtype=np.int64))
+    cache.put_arrays("tables", "k2", a1, {})
+    cache.put_arrays("tables", "k2", dict(x=np.arange(3, dtype=np.int64)),
+                     {})                               # first write wins
+    got, _ = cache.get_arrays("tables", "k2")
+    np.testing.assert_array_equal(got["x"], a1["x"])
