@@ -1,0 +1,32 @@
+"""Execution forensics for the NUMA task-runtime simulator.
+
+The simulator's aggregate metrics (makespan, steal count, remote
+fraction) say *how well* a scheduler did; the event traces captured
+under ``SimParams(trace=True)`` say *why*. This package is the analysis
+pipeline on top of those traces:
+
+* :mod:`analysis.loader`  — normalize trace sources (live
+  :class:`~repro.core.sim.SimResult` values, sidecar ``.npz`` files,
+  durable-sweep journals) into :class:`~analysis.loader.TraceRecord`.
+* :mod:`analysis.frames`  — pandas DataFrames over the event columns
+  (optional; everything else is pure numpy).
+* :mod:`analysis.stats`   — steal-distance histograms, per-node
+  locality scores, queue-depth timelines, per-thread utilization.
+* :mod:`analysis.figures` — matplotlib renderings of the stats plus
+  the paper's figure set (speedup bars/lines) from the same sweep.
+* :mod:`analysis.report`  — the one-command driver::
+
+      PYTHONPATH=src python -m analysis.report [--quick] [--engine both]
+
+  runs a traced sweep (paper-scale FFT included), checks py↔C trace
+  parity, and regenerates every figure under ``artifacts/analysis/``.
+"""
+
+from __future__ import annotations
+
+from .loader import TraceRecord, from_grid, from_npz, from_result, \
+    from_store
+from . import stats
+
+__all__ = ["TraceRecord", "from_grid", "from_npz", "from_result",
+           "from_store", "stats"]

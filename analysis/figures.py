@@ -1,0 +1,183 @@
+"""Matplotlib renderings: paper figures + trace diagnostics.
+
+Two figure families from the same traced sweep:
+
+* the **paper set** — speedup-vs-threads lines for the scheduler study
+  (Figs 13–15) and baseline-vs-NUMA allocation bars (Figs 5–10
+  condensed to the T_max comparison the paper headlines);
+* the **forensics set** — steal-distance heatmap, per-node locality
+  scores, queue-depth timelines, and per-thread Gantt charts, none of
+  which exist in the paper: they are the *why* behind its bars.
+
+All renderers take plain arrays/dicts (produced by
+:mod:`analysis.stats`) and write a PNG; matplotlib is imported lazily
+with the Agg backend so the pipeline works headless.
+"""
+
+from __future__ import annotations
+
+import os
+
+import numpy as np
+
+__all__ = ["steal_heatmap", "locality_bars", "queue_depth",
+           "gantt_chart", "speedup_lines", "variant_gain_bars"]
+
+
+def _plt():
+    import matplotlib
+    matplotlib.use("Agg")
+    import matplotlib.pyplot as plt
+    return plt
+
+
+def _save(fig, path: str) -> str:
+    d = os.path.dirname(path)
+    if d:
+        os.makedirs(d, exist_ok=True)
+    fig.savefig(path, dpi=140, bbox_inches="tight")
+    _plt().close(fig)
+    return path
+
+
+def steal_heatmap(hists: "dict[str, np.ndarray]", path: str,
+                  title: str = "Steal distance") -> str:
+    """Rows = runs, columns = hop distance, cell = steal count."""
+    plt = _plt()
+    labels = list(hists)
+    width = max(len(h) for h in hists.values())
+    m = np.zeros((len(labels), width))
+    for i, lbl in enumerate(labels):
+        h = hists[lbl]
+        m[i, :len(h)] = h
+    fig, ax = plt.subplots(
+        figsize=(1.6 + 1.1 * width, 0.8 + 0.42 * len(labels)))
+    im = ax.imshow(m, aspect="auto", cmap="viridis")
+    ax.set_xticks(range(width))
+    ax.set_xlabel("hop distance (0 = same node)")
+    ax.set_yticks(range(len(labels)))
+    ax.set_yticklabels(labels, fontsize=7)
+    for i in range(len(labels)):
+        for j in range(width):
+            if m[i, j]:
+                ax.text(j, i, f"{int(m[i, j])}", ha="center",
+                        va="center", fontsize=6,
+                        color="w" if m[i, j] < m.max() / 2 else "k")
+    ax.set_title(title)
+    fig.colorbar(im, ax=ax, label="steals")
+    return _save(fig, path)
+
+
+def locality_bars(scores: "dict[str, np.ndarray]", path: str,
+                  title: str = "Per-node locality") -> str:
+    """Grouped bars: one group per NUMA node, one bar per run; height
+    = locality score (1.0 = no remote-access penalty on that node)."""
+    plt = _plt()
+    labels = list(scores)
+    nn = max(len(s) for s in scores.values())
+    fig, ax = plt.subplots(figsize=(1.5 + 0.55 * nn * len(labels), 3.2))
+    w = 0.8 / max(len(labels), 1)
+    x = np.arange(nn)
+    for i, lbl in enumerate(labels):
+        s = np.asarray(scores[lbl], dtype=float)
+        s = np.pad(s, (0, nn - len(s)), constant_values=np.nan)
+        ax.bar(x + (i - (len(labels) - 1) / 2) * w, s, w, label=lbl)
+    ax.set_xticks(x)
+    ax.set_xlabel("NUMA node")
+    ax.set_ylabel("locality score")
+    ax.set_ylim(0, 1.05)
+    ax.set_title(title)
+    ax.legend(fontsize=7)
+    return _save(fig, path)
+
+
+def queue_depth(series: "dict[str, tuple]", path: str,
+                title: str = "Ready-queue depth") -> str:
+    """Timelines: ``{label: (t, mean_depth)}`` on one axis."""
+    plt = _plt()
+    fig, ax = plt.subplots(figsize=(7, 3.2))
+    for lbl, (t, depth) in series.items():
+        ax.plot(t, depth, label=lbl, lw=1.1)
+    ax.set_xlabel("simulated time")
+    ax.set_ylabel("mean queue depth")
+    ax.set_title(title)
+    ax.legend(fontsize=7)
+    return _save(fig, path)
+
+
+def gantt_chart(intervals: "dict[int, tuple]", path: str,
+                title: str = "Execution Gantt",
+                num_nodes: "int | None" = None) -> str:
+    """Per-thread ``broken_barh`` of exec intervals, colored by the
+    NUMA node each interval ran on (``intervals`` from stats.gantt)."""
+    plt = _plt()
+    from matplotlib import cm
+    from matplotlib.patches import Patch
+    threads = sorted(intervals)
+    nn = num_nodes or 1 + max(
+        (int(nodes.max()) for _, _, nodes in intervals.values()
+         if len(nodes)), default=0)
+    cmap = cm.get_cmap("tab10" if nn <= 10 else "tab20")
+    fig, ax = plt.subplots(figsize=(8, 0.6 + 0.3 * len(threads)))
+    for row, th in enumerate(threads):
+        starts, durs, nodes = intervals[th]
+        ax.broken_barh(list(zip(starts, durs)), (row - 0.4, 0.8),
+                       facecolors=[cmap(int(n) % cmap.N)
+                                   for n in nodes], linewidth=0)
+    ax.set_yticks(range(len(threads)))
+    ax.set_yticklabels([f"t{th}" for th in threads], fontsize=7)
+    ax.set_xlabel("simulated time")
+    ax.set_title(title)
+    ax.legend(handles=[Patch(color=cmap(n % cmap.N), label=f"node {n}")
+                       for n in range(nn)], fontsize=6, ncol=min(nn, 8),
+              loc="upper right")
+    return _save(fig, path)
+
+
+def speedup_lines(study: "dict[str, dict[str, tuple]]", outdir: str,
+                  prefix: str = "fig13_15") -> "list[str]":
+    """Scheduler-study lines (paper Figs 13–15): one figure per
+    workload; ``study[workload][scheduler] = (threads, mean, ci95)``."""
+    plt = _plt()
+    paths = []
+    for wl, per_sched in study.items():
+        fig, ax = plt.subplots(figsize=(4.2, 3.2))
+        for sched, (ts, mean, ci) in per_sched.items():
+            ax.errorbar(ts, mean, yerr=ci, marker="o", ms=3,
+                        capsize=2, lw=1.2, label=sched)
+        ax.set_xlabel("threads")
+        ax.set_ylabel("speedup")
+        ax.set_title(f"{wl}: NUMA-aware schedulers")
+        ax.legend(fontsize=7)
+        paths.append(_save(
+            fig, os.path.join(outdir, f"{prefix}_{wl}.png")))
+    return paths
+
+
+def variant_gain_bars(alloc: "dict[str, dict[str, tuple]]", path: str,
+                      threads: int) -> str:
+    """Thread-allocation study (paper Figs 5–10, condensed): for each
+    benchmark × scheduler, baseline-Nanos vs NUMA-aware speedup at
+    ``threads``; ``alloc[bench][sched] = (base_mean, numa_mean)``."""
+    plt = _plt()
+    benches = list(alloc)
+    fig, axes = plt.subplots(
+        1, len(benches), figsize=(2.1 * len(benches) + 1, 3.0),
+        sharey=False)
+    if len(benches) == 1:
+        axes = [axes]
+    for ax, bench in zip(axes, benches):
+        scheds = list(alloc[bench])
+        x = np.arange(len(scheds))
+        base = [alloc[bench][s][0] for s in scheds]
+        numa = [alloc[bench][s][1] for s in scheds]
+        ax.bar(x - 0.2, base, 0.4, label="baseline")
+        ax.bar(x + 0.2, numa, 0.4, label="NUMA-aware")
+        ax.set_xticks(x)
+        ax.set_xticklabels(scheds, fontsize=7)
+        ax.set_title(bench, fontsize=8)
+    axes[0].set_ylabel(f"speedup @ {threads} threads")
+    axes[0].legend(fontsize=7)
+    fig.suptitle("Thread-allocation study: baseline vs NUMA-aware",
+                 fontsize=9)
+    return _save(fig, path)

@@ -1,0 +1,78 @@
+"""Pandas views of event traces (optional layer).
+
+The stats layer (:mod:`analysis.stats`) is pure numpy; this module is
+the ad-hoc-exploration surface — tidy DataFrames you can group, join,
+and pivot in a notebook, plus CSV export for the report driver. It
+degrades gracefully: if pandas is not installed the module imports
+fine and every frame constructor raises a clear ``ImportError``.
+"""
+
+from __future__ import annotations
+
+try:
+    import pandas as _pd
+except ImportError:                    # pragma: no cover - env-dependent
+    _pd = None
+
+HAVE_PANDAS = _pd is not None
+
+__all__ = ["HAVE_PANDAS", "exec_frame", "steal_frame", "mig_frame",
+           "events_frame"]
+
+
+def _pandas():
+    if _pd is None:
+        raise ImportError("analysis.frames needs pandas; install it or "
+                          "use the numpy stats in analysis.stats")
+    return _pd
+
+
+def exec_frame(trace):
+    """Exec events: task, thread, core, node, qlen, start, end, dur."""
+    pd = _pandas()
+    df = pd.DataFrame({
+        "task": trace.ex_task, "thread": trace.ex_thread,
+        "core": trace.ex_core, "node": trace.ex_node,
+        "qlen": trace.ex_qlen, "start": trace.ex_start,
+        "end": trace.ex_end})
+    df["dur"] = df["end"] - df["start"]
+    return df
+
+
+def steal_frame(trace):
+    """Steal events: time, thief, victim, task, hop distance."""
+    pd = _pandas()
+    return pd.DataFrame({
+        "time": trace.st_time, "thief": trace.st_thief,
+        "victim": trace.st_victim, "task": trace.st_task,
+        "dist": trace.st_dist})
+
+
+def mig_frame(trace):
+    """Migration events: time, thread, from-core, to-core."""
+    pd = _pandas()
+    return pd.DataFrame({
+        "time": trace.mg_time, "thread": trace.mg_thread,
+        "from_core": trace.mg_from, "to_core": trace.mg_to})
+
+
+def events_frame(records, kind: str = "steal"):
+    """One tidy frame over many records, labeled per record.
+
+    ``kind`` ∈ {"exec", "steal", "mig"}. Records without a trace are
+    skipped (they contribute no events).
+    """
+    pd = _pandas()
+    mk = {"exec": exec_frame, "steal": steal_frame,
+          "mig": mig_frame}[kind]
+    parts = []
+    for rec in records:
+        tr = getattr(rec, "trace", None)
+        if tr is None:
+            continue
+        df = mk(tr)
+        df.insert(0, "label", getattr(rec, "label", ""))
+        parts.append(df)
+    if not parts:
+        return pd.DataFrame()
+    return pd.concat(parts, ignore_index=True)

@@ -1,0 +1,122 @@
+"""Normalize trace sources into :class:`TraceRecord` values.
+
+Three places an event trace can come from, one shape out:
+
+* a **live run** — ``Machine.run(...)`` / ``Grid.run()`` under
+  ``SimParams(trace=True)`` attaches a ``TraceBuffer`` to each
+  ``SimResult`` (:func:`from_result` / :func:`from_grid`);
+* a **sidecar file** — one ``.npz`` written by
+  ``TraceBuffer.save_npz`` or spilled by the result store
+  (:func:`from_npz`);
+* a **durable-sweep journal** — a :class:`~repro.core.sim.ResultStore`
+  JSONL plus its ``<stem>.traces/`` sidecar directory
+  (:func:`from_store`); records keep their journal cell key.
+
+A record's ``trace`` may be ``None`` (untraced cell, or a journal
+entry whose sidecar was pruned); :mod:`analysis.stats` falls back to
+the always-on aggregate counters on the ``SimResult`` where it can.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+
+__all__ = ["TraceRecord", "label_for", "from_result", "from_grid",
+           "from_npz", "from_store"]
+
+
+@dataclasses.dataclass
+class TraceRecord:
+    """One analyzed cell: a label, its metrics, and (maybe) its trace."""
+
+    label: str
+    result: "object | None" = None     # SimResult
+    trace: "object | None" = None      # TraceBuffer
+    key: "str | None" = None           # journal cell key, if journaled
+
+    @property
+    def meta(self) -> dict:
+        return dict(getattr(self.trace, "meta", None) or {})
+
+    def __repr__(self):
+        tr = self.trace
+        return (f"TraceRecord({self.label!r}, "
+                f"trace={'yes' if tr is not None else 'no'})")
+
+
+def label_for(key) -> str:
+    """Human label for a :class:`~repro.core.sim.GridKey` cell."""
+    lbl = (f"{key.workload}/{key.scheduler}/{key.context}"
+           f"/T{key.threads}/s{key.seed}")
+    if getattr(key, "faults", "none") != "none":
+        lbl += f"/{key.faults}"
+    return lbl
+
+
+def from_result(result, label: str = "run") -> TraceRecord:
+    """Wrap one live ``SimResult`` (trace attached or not)."""
+    return TraceRecord(label, result=result,
+                       trace=getattr(result, "trace", None))
+
+
+def from_grid(results: dict) -> "list[TraceRecord]":
+    """Records for every successful cell of a ``Grid.run()`` mapping.
+
+    Failed cells (``CellError`` under ``strict=False``) are skipped —
+    there is nothing to analyze in a cell that produced no events.
+    """
+    out = []
+    for k, r in results.items():
+        if not hasattr(r, "makespan"):
+            continue
+        out.append(from_result(r, label_for(k)))
+    return out
+
+
+def from_npz(path, label: "str | None" = None) -> TraceRecord:
+    """Load one sidecar ``.npz`` trace file."""
+    from repro.core.sim.trace import TraceBuffer
+    tr = TraceBuffer.load_npz(path)
+    if label is None:
+        label = _meta_label(tr.meta) or \
+            os.path.splitext(os.path.basename(os.fspath(path)))[0]
+    return TraceRecord(label, trace=tr)
+
+
+def from_store(store) -> "list[TraceRecord]":
+    """Records for every journaled cell of a durable-sweep store.
+
+    ``store`` is a :class:`~repro.core.sim.ResultStore` or a journal
+    path. Each record carries its journal key; traces load from the
+    ``<stem>.traces/`` sidecars where present.
+    """
+    opened = None
+    if not hasattr(store, "get_trace"):
+        from repro.core.sim import ResultStore
+        store = opened = ResultStore(store)
+    try:
+        out = []
+        for key, res in store.items():
+            tr = store.get_trace(key)
+            lbl = (_meta_label(getattr(tr, "meta", None))
+                   or f"cell:{key[:12]}")
+            out.append(TraceRecord(lbl, result=res, trace=tr, key=key))
+        return out
+    finally:
+        if opened is not None:
+            opened.close()
+
+
+def _meta_label(meta) -> "str | None":
+    """Label from trace metadata (scheduler/threads/seed), if present."""
+    if not meta:
+        return None
+    parts = []
+    if "scheduler" in meta:
+        parts.append(str(meta["scheduler"]))
+    if "threads" in meta:
+        parts.append(f"T{meta['threads']}")
+    if "seed" in meta:
+        parts.append(f"s{meta['seed']}")
+    return "/".join(parts) if parts else None

@@ -1,0 +1,272 @@
+"""One-command execution forensics over the paper sweep.
+
+    PYTHONPATH=src python -m analysis.report [--quick]
+        [--engine {py,c,both}] [--seeds N] [--out DIR] [--workers N]
+        [--store PATH] [--from-store PATH]
+
+Runs the traced figure sweep (:func:`benchmarks.bots_repro.
+forensics_plan` — scheduler study + thread-allocation study, paper-
+scale FFT included; ``--quick`` is the fft-small CI smoke), then:
+
+* regenerates the **paper figure set** — speedup-vs-threads lines for
+  Figs 13–15, baseline-vs-NUMA bars for Figs 5–10 — from the sweep's
+  ``SimResult`` metrics;
+* renders the **forensics set** from the event traces — steal-distance
+  heatmap, per-node locality scores, queue-depth timelines, per-thread
+  Gantt charts — plus ``steals.csv`` (tidy event export) and
+  ``forensics.json`` (headline stats per cell);
+* under ``--engine both`` runs the sweep on *both* engines and asserts
+  results **and traces** are identical cell-for-cell before rendering.
+
+``--store`` journals the sweep durably (traces spill to sidecars);
+``--from-store`` skips simulation and analyzes an existing journal's
+sidecar traces instead.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+from . import figures, frames, loader, stats
+
+DEFAULT_OUT = os.path.join("artifacts", "analysis")
+
+
+def _mean_ci(xs) -> "tuple[float, float]":
+    a = np.asarray(list(xs), dtype=float)
+    if len(a) < 2:
+        return float(a.mean()), 0.0
+    return float(a.mean()), float(1.96 * a.std(ddof=1) / np.sqrt(len(a)))
+
+
+def _run_sweep(engine, quick, seeds, store, workers):
+    """The traced forensics sweep under one engine (None: current)."""
+    from repro.core.sim import reset_engine_cache
+    from benchmarks import bots_repro
+    prev = os.environ.get("REPRO_SIM_ENGINE")
+    if engine:
+        os.environ["REPRO_SIM_ENGINE"] = engine
+        reset_engine_cache()
+    try:
+        machine = bots_repro.traced_machine()
+        grid, info = bots_repro.forensics_plan(
+            machine, quick=quick, seeds=seeds, store=store)
+        return grid.run(workers=workers), info
+    finally:
+        if engine:
+            if prev is None:
+                os.environ.pop("REPRO_SIM_ENGINE", None)
+            else:
+                os.environ["REPRO_SIM_ENGINE"] = prev
+            reset_engine_cache()
+
+
+def _check_parity(res_a, res_b) -> int:
+    """Cell-for-cell py↔C equality of results *and* event traces."""
+    bad = 0
+    for k, ra in res_a.items():
+        rb = res_b[k]
+        if ra != rb or ra.trace != rb.trace:
+            bad += 1
+            print(f"PARITY FAILURE at {loader.label_for(k)}",
+                  file=sys.stderr)
+    return bad
+
+
+def _paper_figures(res, info, out) -> "list[str]":
+    """Figs 13–15 lines + Figs 5–10 bars from the sweep's metrics."""
+    from benchmarks.bots_repro import ALLOC_SCHEDS, STUDY_SCHEDS
+    threads, seeds = info["threads"], info["seeds"]
+    top = threads[-1]
+    study = {}
+    for wl in info["study"]:
+        per = {}
+        for sched in STUDY_SCHEDS:
+            ms, cis = [], []
+            for T in threads:
+                m, ci = _mean_ci(res[(wl, sched, "numa", T, s, "none")].speedup
+                                 for s in seeds)
+                ms.append(m)
+                cis.append(ci)
+            per[sched] = (list(threads), ms, cis)
+        study[wl] = per
+    paths = figures.speedup_lines(study, out)
+    alloc = {}
+    for wl in info["alloc"]:
+        per = {}
+        for sched in ALLOC_SCHEDS:
+            base, _ = _mean_ci(res[(wl, sched, "base", top, s, "none")].speedup
+                               for s in seeds)
+            numa, _ = _mean_ci(res[(wl, sched, "numa", top, s, "none")].speedup
+                               for s in seeds)
+            per[sched] = (base, numa)
+        alloc[wl] = per
+    paths.append(figures.variant_gain_bars(
+        alloc, os.path.join(out, "fig5_10_threadalloc.png"), top))
+    return paths
+
+
+def _forensics_figures(records, out, gantt_of=()) -> "list[str]":
+    """The trace diagnostics shared by the sweep and journal paths."""
+    traced = [r for r in records if r.trace is not None]
+    if not traced:
+        return []
+    paths = []
+    hists = {r.label: stats.steal_hist(r) for r in traced}
+    width = max(len(h) for h in hists.values())
+    hists = {lbl: stats.steal_hist(r, max_hop=width - 1)
+             for lbl, r in zip(hists, traced)}
+    paths.append(figures.steal_heatmap(
+        hists, os.path.join(out, "steal_distance_heatmap.png")))
+    paths.append(figures.locality_bars(
+        {r.label: stats.locality(r)["score"] for r in traced},
+        os.path.join(out, "node_locality.png")))
+    paths.append(figures.queue_depth(
+        {r.label: stats.queue_depth_timeline(r)[:2] for r in traced},
+        os.path.join(out, "queue_depth.png")))
+    for r in gantt_of:
+        safe = r.label.replace("/", "_")
+        paths.append(figures.gantt_chart(
+            stats.gantt(r), os.path.join(out, f"gantt_{safe}.png"),
+            title=f"Gantt: {r.label}",
+            num_nodes=int(r.meta.get("num_nodes", 0)) or None))
+    if frames.HAVE_PANDAS:
+        df = frames.events_frame(traced, kind="steal")
+        csv = os.path.join(out, "steals.csv")
+        df.to_csv(csv, index=False)
+        paths.append(csv)
+    return paths
+
+
+def run_forensics(quick: bool = False, engine: "str | None" = "both",
+                  seeds=(0, 1), out: str = DEFAULT_OUT, store=None,
+                  workers=None) -> dict:
+    """Run the traced sweep and regenerate every figure; returns a
+    summary dict (rows, figure paths, parity status)."""
+    from repro.core.sim import _csim
+    from benchmarks.bots_repro import STUDY_SCHEDS
+    engines = [engine]
+    parity = None
+    if engine == "both":
+        if _csim.load() is None:
+            print("# --engine both: C kernel unavailable "
+                  f"({_csim.load_error}); running py only")
+            engines = ["py"]
+        else:
+            engines = ["c", "py"]
+    t0 = time.perf_counter()
+    res = info = None
+    for eng in engines:
+        r, info = _run_sweep(eng, quick, seeds, store, workers)
+        if res is None:
+            res = r            # figures come from the first engine
+        else:
+            bad = _check_parity(res, r)
+            parity = bad == 0
+            if bad:
+                raise SystemExit(
+                    f"{bad} cell(s) diverge between engines")
+    os.makedirs(out, exist_ok=True)
+    paths = _paper_figures(res, info, out)
+
+    # forensic slice: the study workloads at the top thread count,
+    # NUMA variant, first seed — the cells the paper's bars headline
+    top, s0 = info["threads"][-1], info["seeds"][0]
+    slice_keys = [k for k in res
+                  if k.threads == top and k.context == "numa"
+                  and k.seed == s0 and k.workload in info["study"]
+                  and k.scheduler in STUDY_SCHEDS]
+    records = [loader.from_result(res[k], loader.label_for(k))
+               for k in slice_keys]
+    gantt_of = [r for r in records
+                if any(r.label.startswith(f"{info['study'][0]}/{s}/")
+                       for s in ("wf", "dfwsrpt"))]
+    paths += _forensics_figures(records, out, gantt_of=gantt_of)
+
+    rows = []
+    for r in records:
+        row = dict(label=r.label)
+        row.update(stats.summary(r))
+        rows.append(row)
+    summary = dict(
+        quick=quick, engines=engines, parity=parity,
+        cells=len(res), seconds=round(time.perf_counter() - t0, 2),
+        out=out, figures=sorted(paths), rows=rows)
+    with open(os.path.join(out, "forensics.json"), "w") as f:
+        json.dump(summary, f, indent=1, sort_keys=True)
+    return summary
+
+
+def report_from_store(path, out: str = DEFAULT_OUT) -> dict:
+    """Analyze an existing durable-sweep journal's sidecar traces."""
+    records = [r for r in loader.from_store(path) if r.trace is not None]
+    if not records:
+        raise SystemExit(f"no sidecar traces under {path!r} — run the "
+                         "sweep with SimParams(trace=True) and store=")
+    os.makedirs(out, exist_ok=True)
+    paths = _forensics_figures(records, out, gantt_of=records[:1])
+    rows = []
+    for r in records:
+        row = dict(label=r.label)
+        row.update(stats.summary(r))
+        rows.append(row)
+    summary = dict(source=os.fspath(path), cells=len(records), out=out,
+                   figures=sorted(paths), rows=rows)
+    with open(os.path.join(out, "forensics.json"), "w") as f:
+        json.dump(summary, f, indent=1, sort_keys=True)
+    return summary
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(
+        description="regenerate paper figures + trace forensics")
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke: fft-small + sparselu, 1 seed")
+    ap.add_argument("--engine", choices=("py", "c", "both"),
+                    default="both",
+                    help="engine(s); 'both' asserts trace parity")
+    ap.add_argument("--seeds", type=int, default=None,
+                    help="Monte-Carlo replicas per cell "
+                         "(default: 1 quick / 2 full)")
+    ap.add_argument("--out", default=DEFAULT_OUT)
+    ap.add_argument("--workers", type=int, default=None)
+    ap.add_argument("--store", default=None,
+                    help="journal the sweep durably (traces spill to "
+                         "<stem>.traces/ sidecars)")
+    ap.add_argument("--from-store", default=None,
+                    help="skip simulation; analyze this journal's "
+                         "sidecar traces")
+    args = ap.parse_args()
+
+    if args.from_store:
+        summary = report_from_store(args.from_store, out=args.out)
+    else:
+        n = args.seeds if args.seeds else (1 if args.quick else 2)
+        store = None
+        if args.store:
+            from repro.core.sim import ResultStore
+            store = ResultStore(args.store)
+        summary = run_forensics(
+            quick=args.quick, engine=args.engine,
+            seeds=tuple(range(n)), out=args.out, store=store,
+            workers=args.workers)
+        if store is not None:
+            store.close()
+
+    for row in summary["rows"]:
+        print(",".join(f"{k}={v}" for k, v in row.items()))
+    if summary.get("parity") is not None:
+        print(f"# parity: {'ok' if summary['parity'] else 'FAILED'} "
+              f"({summary.get('cells')} cells x "
+              f"{len(summary.get('engines', []))} engines)")
+    print(f"# {len(summary['figures'])} artifacts -> {summary['out']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,183 @@
+"""Trace statistics: pure-numpy reductions over event columns.
+
+Every function accepts a :class:`~analysis.loader.TraceRecord` (or a
+bare ``TraceBuffer`` / ``SimResult`` where that makes sense) and
+returns plain numpy arrays / dicts — no pandas, no matplotlib — so the
+stats layer runs anywhere the simulator runs. Where a record has no
+event trace, functions fall back to the always-on aggregate counters
+(``SimResult.steal_hops`` / ``node_tasks`` / ``node_remote``) or raise
+``ValueError`` when the statistic genuinely needs events.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = ["steal_hist", "locality", "queue_depth_timeline",
+           "thread_utilization", "gantt", "summary"]
+
+
+def _parts(rec):
+    """(result, trace) from a TraceRecord / SimResult / TraceBuffer."""
+    res = getattr(rec, "result", None)
+    tr = getattr(rec, "trace", None)
+    if res is None and hasattr(rec, "makespan"):
+        res, tr = rec, getattr(rec, "trace", None)
+    if tr is None and hasattr(rec, "st_dist"):
+        tr = rec
+    return res, tr
+
+
+def _need_trace(rec, what: str):
+    _, tr = _parts(rec)
+    if tr is None:
+        raise ValueError(f"{what} needs an event trace; this record has "
+                         "none (run under SimParams(trace=True))")
+    return tr
+
+
+def steal_hist(rec, max_hop: "int | None" = None) -> np.ndarray:
+    """Steal count per hop distance (index = hops, 0 = same node).
+
+    Uses trace steal events when present, the aggregate
+    ``SimResult.steal_hops`` counter otherwise; ``max_hop`` pads (or
+    validates) the histogram length for cross-run alignment.
+    """
+    res, tr = _parts(rec)
+    if tr is not None:
+        h = np.bincount(np.asarray(tr.st_dist, dtype=np.int64),
+                        minlength=(max_hop or 0) + 1)
+    elif res is not None and getattr(res, "steal_hops", ()):
+        h = np.asarray(res.steal_hops, dtype=np.int64)
+        if max_hop is not None and len(h) < max_hop + 1:
+            h = np.pad(h, (0, max_hop + 1 - len(h)))
+    else:
+        raise ValueError("record has neither a trace nor aggregate "
+                         "steal_hops")
+    return h.astype(np.int64)
+
+
+def locality(rec) -> dict:
+    """Per-NUMA-node locality: where work ran and what it paid.
+
+    Returns ``tasks`` (committed executions per node), ``remote``
+    (simulated time each node spent on remote-access penalties, from
+    the aggregate counter), ``busy`` (total execution time per node,
+    from the trace; NaN without one), and ``score`` — the fraction of
+    a node's execution time *not* spent waiting on remote memory,
+    ``1 - remote/busy`` in ``[0, 1]`` (1.0 = perfectly local). Idle
+    nodes score NaN.
+    """
+    res, tr = _parts(rec)
+    nn = 0
+    if res is not None and getattr(res, "node_tasks", ()):
+        nn = len(res.node_tasks)
+    elif tr is not None:
+        nn = int(tr.meta.get("num_nodes", 0)) or \
+            (int(tr.ex_node.max()) + 1 if tr.n_exec else 1)
+    if not nn:
+        raise ValueError("record has neither a trace nor aggregate "
+                         "node counters")
+    tasks = np.zeros(nn, dtype=np.int64)
+    remote = np.full(nn, np.nan)
+    busy = np.full(nn, np.nan)
+    if res is not None and getattr(res, "node_tasks", ()):
+        tasks = np.asarray(res.node_tasks, dtype=np.int64)
+        remote = np.asarray(res.node_remote, dtype=np.float64)
+    elif tr is not None:
+        np.add.at(tasks, np.asarray(tr.ex_node, dtype=np.int64), 1)
+    if tr is not None:
+        busy = np.zeros(nn)
+        np.add.at(busy, np.asarray(tr.ex_node, dtype=np.int64),
+                  np.asarray(tr.ex_end) - np.asarray(tr.ex_start))
+    with np.errstate(invalid="ignore", divide="ignore"):
+        score = 1.0 - remote / busy
+    score = np.where(busy > 0, np.clip(score, 0.0, 1.0), np.nan)
+    return dict(tasks=tasks, remote=remote, busy=busy, score=score)
+
+
+def queue_depth_timeline(rec, bins: int = 120,
+                         span: "float | None" = None):
+    """Mean and max ready-queue depth over simulated time.
+
+    Depth is sampled at each exec commit (the depth of the committing
+    thread's deque under depth-first policies, of the shared queue
+    otherwise). Returns ``(centers, mean, peak)``; bins with no
+    samples are NaN (mean) / 0 (peak).
+    """
+    tr = _need_trace(rec, "queue_depth_timeline")
+    t = np.asarray(tr.ex_start, dtype=np.float64)
+    q = np.asarray(tr.ex_qlen, dtype=np.float64)
+    hi = float(span if span is not None
+               else (tr.ex_end.max() if tr.n_exec else 1.0)) or 1.0
+    edges = np.linspace(0.0, hi, bins + 1)
+    idx = np.clip(np.searchsorted(edges, t, side="right") - 1,
+                  0, bins - 1)
+    cnt = np.bincount(idx, minlength=bins).astype(np.float64)
+    tot = np.bincount(idx, weights=q, minlength=bins)
+    peak = np.zeros(bins)
+    np.maximum.at(peak, idx, q)
+    with np.errstate(invalid="ignore"):
+        mean = np.where(cnt > 0, tot / np.maximum(cnt, 1), np.nan)
+    centers = (edges[:-1] + edges[1:]) / 2
+    return centers, mean, peak
+
+
+def thread_utilization(rec, span: "float | None" = None) -> np.ndarray:
+    """Busy fraction per thread: exec time / makespan."""
+    tr = _need_trace(rec, "thread_utilization")
+    res, _ = _parts(rec)
+    nt = int(tr.meta.get("threads", 0)) or \
+        (int(tr.ex_thread.max()) + 1 if tr.n_exec else 1)
+    hi = span
+    if hi is None:
+        hi = getattr(res, "makespan", None) or \
+            tr.meta.get("makespan") or \
+            (float(tr.ex_end.max()) if tr.n_exec else 1.0)
+    busy = np.zeros(nt)
+    np.add.at(busy, np.asarray(tr.ex_thread, dtype=np.int64),
+              np.asarray(tr.ex_end) - np.asarray(tr.ex_start))
+    return busy / max(float(hi), 1e-300)
+
+
+def gantt(rec) -> dict:
+    """Per-thread execution intervals for Gantt rendering.
+
+    ``{thread: (starts, durations, nodes)}`` — one entry per committed
+    exec event, in commit order; ``nodes`` colors intervals by the
+    NUMA node the work ran on.
+    """
+    tr = _need_trace(rec, "gantt")
+    th = np.asarray(tr.ex_thread, dtype=np.int64)
+    out = {}
+    for t in np.unique(th):
+        m = th == t
+        out[int(t)] = (np.asarray(tr.ex_start)[m],
+                       (np.asarray(tr.ex_end)
+                        - np.asarray(tr.ex_start))[m],
+                       np.asarray(tr.ex_node, dtype=np.int64)[m])
+    return out
+
+
+def summary(rec) -> dict:
+    """One row of headline forensics for a record (textual reports)."""
+    res, tr = _parts(rec)
+    h = steal_hist(rec)
+    steals = int(h.sum())
+    hops = float((h * np.arange(len(h))).sum() / steals) if steals \
+        else 0.0
+    loc = locality(rec)
+    score = loc["score"]
+    row = dict(steals=steals, steal_hop_mean=round(hops, 3),
+               locality=round(float(np.nanmean(score)), 4)
+               if np.isfinite(score).any() else None)
+    if tr is not None:
+        util = thread_utilization(rec)
+        row.update(events=int(tr.n_exec + tr.n_steal + tr.n_mig),
+                   migrations=int(tr.n_mig),
+                   util_mean=round(float(util.mean()), 4))
+    if res is not None:
+        row.update(makespan=round(float(res.makespan), 4),
+                   speedup=None if res.speedup is None
+                   else round(float(res.speedup), 3))
+    return row

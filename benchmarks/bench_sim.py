@@ -54,9 +54,16 @@ import sys
 import time
 
 from repro.core import topology
-from repro.core.sim import (SCHEDULERS, Machine, bots, ensure_table,
-                            reset_engine_cache)
+from repro.core.sim import (SCHEDULERS, Machine, SimParams, bots,
+                            ensure_table, reset_engine_cache)
 from repro.core.sim import _csim
+
+# in-run trace-capture overhead ceilings (bench_trace rows, gated by
+# --check regardless of the committed baseline): the compiled kernel —
+# the production warm path — must stay within 15%; the pure-Python
+# reference engine pays unavoidable per-event interpreter cost
+# (~25% structurally) and gets a looser regression backstop.
+TRACE_OVERHEAD_LIMIT = {"c": 15.0, "py": 60.0}
 
 # the five stock schedulers benched against the committed baseline;
 # policy-layer additions (dfwshier, ...) get their own rows automatically
@@ -170,6 +177,55 @@ def bench_fault_hook(reps: int = 5, threads: int = 16):
                     scheduler=sched, engine=engine, threads=threads,
                     build_s=0.0, cold_s=0.0, warm_s=round(warm_s, 6),
                     tasks_per_s=round(tasks / warm_s, 1),
+                    makespan=r.makespan, speedup=round(r.speedup, 4),
+                    steals=r.steals, reclaimed=r.reclaimed,
+                    reexec=r.reexec,
+                    fault_lost=round(r.fault_lost, 4))
+
+
+def bench_trace(reps: int = 5, threads: int = 16):
+    """Trace-capture overhead rows: fft-medium under full event
+    tracing (``SimParams(trace=True)``) vs the plain warm path.
+
+    Keyed ``scale="medium+trace"``; ``warm_s`` is the *traced* warm
+    time, ``untraced_s`` the same-process untraced re-measurement, and
+    ``trace_overhead_pct`` their fresh in-run ratio. ``--check`` gates
+    the overhead against :data:`TRACE_OVERHEAD_LIMIT` directly — a new
+    row has no committed-baseline entry, so the usual warm_s
+    comparison cannot see it.
+    """
+    plain = Machine(topology.sunfire_x4600())
+    traced = Machine(topology.sunfire_x4600(), SimParams(trace=True))
+    wl = bots.fft(n=1 << 15, cutoff=4)
+    tasks = ensure_table(wl).n
+    for engine in _engines():
+        with _engine_env(engine):
+            ctx = plain.context(threads, binding="paper")
+            tctx = traced.context(threads, binding="paper")
+            for sched in ("dfwsrpt",):
+                def warm(machine, c):
+                    machine.run(wl, sched, seed=0, context=c)
+                    best = float("inf")
+                    r = None
+                    for _ in range(reps):
+                        t0 = time.perf_counter()
+                        r = machine.run(wl, sched, seed=0, context=c)
+                        best = min(best, time.perf_counter() - t0)
+                    return best, r
+                plain_s, r0 = warm(plain, ctx)
+                traced_s, r = warm(traced, tctx)
+                assert r == r0, "traced run diverged from untraced"
+                tr = r.trace
+                yield dict(
+                    workload="fft", scale="medium+trace", tasks=tasks,
+                    scheduler=sched, engine=engine, threads=threads,
+                    build_s=0.0, cold_s=0.0,
+                    warm_s=round(traced_s, 6),
+                    untraced_s=round(plain_s, 6),
+                    trace_overhead_pct=round(
+                        (traced_s / plain_s - 1) * 100, 1),
+                    events=int(tr.n_exec + tr.n_steal + tr.n_mig),
+                    tasks_per_s=round(tasks / traced_s, 1),
                     makespan=r.makespan, speedup=round(r.speedup, 4),
                     steals=r.steals)
 
@@ -404,6 +460,18 @@ def check(rows, baseline_path: str, threshold: float = 0.25,
             print(f"REGRESSION {'/'.join(key)}: warm_s "
                   f"{ref['warm_s']:.6f}s -> {row['warm_s']:.6f}s "
                   f"({(ratio - 1) * 100:+.1f}%)", file=sys.stderr)
+    # in-run trace-overhead gate: fresh traced-vs-untraced ratio from
+    # the same process (baseline-independent, so new rows are covered)
+    for row in rows:
+        pct = row.get("trace_overhead_pct")
+        if pct is None:
+            continue
+        limit = TRACE_OVERHEAD_LIMIT.get(row["engine"], 15.0)
+        if pct > limit:
+            regressions += 1
+            print(f"REGRESSION {row['workload']}/{row['scale']}/"
+                  f"{row['engine']}: trace overhead {pct:+.1f}% > "
+                  f"{limit:.0f}% ceiling", file=sys.stderr)
     checked = sum(1 for row in rows
                   if (row["workload"], row["scale"], row["scheduler"],
                       row["engine"]) in base_by_key)
@@ -450,6 +518,7 @@ def main() -> None:
     for row in itertools.chain(
             bench(args.quick, args.reps, args.threads),
             bench_fault_hook(args.reps, args.threads),
+            bench_trace(args.reps, args.threads),
             batch_rows,
             bench_store(reps=1 if args.quick else 3, quick=args.quick),
             bench_cache(quick=args.quick)):

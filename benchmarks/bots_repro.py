@@ -65,14 +65,18 @@ def _workload(name):
     return wl
 
 
-def variants(name: str) -> dict:
-    """The figure variants: baseline Nanos vs the paper's NUMA model."""
-    k = SPILL[name]
+def variants_k(k: int) -> dict:
+    """The figure variants for a ``spill:K`` dataset footprint."""
     return {
         "base": dict(binding="linear", placement=f"spill:{k}@0",
                      runtime_data=0, migration_rate=MIGRATION),
         "numa": dict(binding="paper", placement=f"spill:{k}"),
     }
+
+
+def variants(name: str) -> dict:
+    """The figure variants: baseline Nanos vs the paper's NUMA model."""
+    return variants_k(SPILL[name])
 
 
 def _serial(name: str) -> float:
@@ -131,6 +135,87 @@ def run_benchmark_stats(name: str, schedulers=("bf", "cilk", "wf"),
 def _pm(stat) -> str:
     """mean ± CI95, the paper-style error bar."""
     return f"{stat.mean:.2f}±{stat.ci95:.2f}"
+
+
+STUDY_SCHEDS = ("wf", "dfwspt", "dfwsrpt", "dfwshier")
+ALLOC_SCHEDS = ("bf", "cilk", "wf")
+
+
+def traced_machine() -> Machine:
+    """The figure machine with event tracing on — the entry point the
+    :mod:`analysis` pipeline uses to replay the paper grids with full
+    execution forensics. Tracing is observational (results stay
+    bit-identical to :data:`MACHINE`'s), so the traced sweep *is* the
+    paper sweep."""
+    return Machine(TOPO, SimParams(trace=True))
+
+
+def forensics_plan(machine: Machine, quick: bool = False,
+                   seeds=(0, 1), store=None):
+    """The single traced sweep behind ``python -m analysis.report``.
+
+    One :meth:`Grid.concat` batch covering both paper studies:
+
+    * scheduler study (Figs 13–15): the study workloads under
+      ``STUDY_SCHEDS`` × a thread axis, NUMA variant;
+    * thread-allocation study (Figs 5–10): every benchmark under
+      ``ALLOC_SCHEDS`` × {base, numa} at the top thread count
+      (``wf``/numa cells come from the study grid — no duplicates).
+
+    Returns ``(grid, info)``; ``info`` names the study/alloc workloads
+    and the thread axis so the analysis layer can slice the results.
+    ``quick`` swaps in fft-small + sparselu (the CI smoke).
+    """
+    threads = (4, 16) if quick else (2, 4, 8, 16)
+    top = threads[-1]
+    if quick:
+        study = {"fft-small": (bots.fft(n=1 << 10, cutoff=8), 2)}
+        small = {"sparselu": (_workload("sparselu"), SPILL["sparselu"])}
+    else:
+        study = {n: (_workload(n), SPILL[n])
+                 for n in ("fft", "sort", "strassen")}
+        small = {n: (_workload(n), SPILL[n])
+                 for n in ("nqueens", "floorplan", "sparselu")}
+    grids = []
+    for name, (wl, k) in study.items():
+        serial = MACHINE.serial_time(wl, placement=f"spill:{k}@0")
+        v = variants_k(k)
+        grids.append(machine.grid(
+            workloads={name: wl}, schedulers=STUDY_SCHEDS,
+            threads=threads, contexts={"numa": v["numa"]}, seeds=seeds,
+            serial_reference=serial, store=store))
+        grids.append(machine.grid(
+            workloads={name: wl}, schedulers=("bf", "cilk"),
+            threads=top, contexts=v, seeds=seeds,
+            serial_reference=serial, store=store))
+        grids.append(machine.grid(
+            workloads={name: wl}, schedulers=("wf",), threads=top,
+            contexts={"base": v["base"]}, seeds=seeds,
+            serial_reference=serial, store=store))
+    for name, (wl, k) in small.items():
+        serial = MACHINE.serial_time(wl, placement=f"spill:{k}@0")
+        grids.append(machine.grid(
+            workloads={name: wl}, schedulers=ALLOC_SCHEDS, threads=top,
+            contexts=variants_k(k), seeds=seeds,
+            serial_reference=serial, store=store))
+    info = dict(threads=threads, seeds=tuple(seeds),
+                study=tuple(study), alloc=tuple(study) + tuple(small))
+    return Grid.concat(grids), info
+
+
+def fig_trace_forensics(report, quick=False):
+    """Execution forensics over the paper sweep (the analysis layer):
+    regenerates the figure set plus trace diagnostics under
+    ``artifacts/analysis/`` and reports headline forensics per cell."""
+    from analysis.report import run_forensics
+    res = run_forensics(quick=quick, engine=None,
+                        seeds=(0,) if quick else (0, 1))
+    for row in res["rows"]:
+        report(f"trace/{row.pop('label')}",
+               derived=" ".join(f"{k}={v}" for k, v in row.items()))
+    report("trace/figures",
+           derived=f"{len(res['figures'])} files -> {res['out']}")
+    return True
 
 
 def fig_5_to_10(report, quick=False):

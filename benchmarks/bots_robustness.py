@@ -38,7 +38,8 @@ import sys
 import time
 
 from repro.core import topology
-from repro.core.sim import CellError, Machine, bots, reset_engine_cache
+from repro.core.sim import CellError, Machine, SimParams, bots, \
+    reset_engine_cache
 from repro.core.sim import _csim
 
 SCHEDULERS = ("bf", "cilk", "wf", "dfwspt", "dfwsrpt", "dfwshier")
@@ -123,6 +124,26 @@ def sweep(machine: Machine, wl, *, axes, threads: int, seeds, span: float,
                     failed_cells=len(errs))
 
 
+def trace_forensics(machine: Machine, wl, threads: int, seeds,
+                    workers=None) -> "list[dict]":
+    """Faults-off execution forensics per scheduler (``--trace``).
+
+    Runs the healthy baseline grid with event tracing and folds each
+    cell through :mod:`analysis.stats` — steal volume and hop
+    distances, per-node locality, thread utilization — the denominator
+    story behind the inflation table above it.
+    """
+    from analysis import from_grid, stats
+    grid = machine.grid(workloads=[wl], schedulers=SCHEDULERS,
+                        threads=threads, seeds=seeds)
+    rows = []
+    for rec in from_grid(grid.run(workers=workers)):
+        row = dict(label=rec.label)
+        row.update(stats.summary(rec))
+        rows.append(row)
+    return rows
+
+
 def _parity_check(machine: Machine, wl, threads: int, span: float) -> int:
     """--quick gate: every fault kind must be bit-identical py vs C."""
     if _csim.load() is None:
@@ -174,11 +195,16 @@ def main() -> None:
     ap.add_argument("--retries", type=int, default=None,
                     help="retry transient cell failures up to N times "
                          "with backoff, degrading C->py")
+    ap.add_argument("--trace", action="store_true",
+                    help="run with event tracing and append a faults-"
+                         "off forensics table (steals, hop distances, "
+                         "locality, utilization per scheduler)")
     ap.add_argument("--out", default=None,
                     help="write rows as JSON (default: stdout only)")
     args = ap.parse_args()
 
-    machine = Machine(topology.sunfire_x4600())
+    machine = Machine(topology.sunfire_x4600(),
+                      SimParams(trace=args.trace))
     name, wl = _workload(args.quick, args.scale)
     axes = QUICK_AXES if args.quick else AXES
     seeds = tuple(range(1 if args.quick else args.seeds))
@@ -220,13 +246,24 @@ def main() -> None:
         print(f"# store: {store!r}")
         store.close()
 
+    forensics = None
+    if args.trace:
+        forensics = trace_forensics(machine, wl, args.threads, seeds,
+                                    workers=args.workers)
+        print("label,steals,steal_hop_mean,locality,util_mean,makespan")
+        for row in forensics:
+            print(f"{row['label']},{row['steals']},"
+                  f"{row['steal_hop_mean']},{row['locality']},"
+                  f"{row['util_mean']},{row['makespan']}", flush=True)
+
     bad = _parity_check(machine, wl, args.threads, span) if args.quick \
         else 0
 
     if args.out:
         with open(args.out, "w") as f:
             json.dump(dict(workload=name, threads=args.threads,
-                           seeds=len(seeds), span=span, rows=rows),
+                           seeds=len(seeds), span=span, rows=rows,
+                           forensics=forensics),
                       f, indent=1, sort_keys=True)
         print(f"# wrote {args.out}")
     if bad:

@@ -87,8 +87,9 @@ def sim_bench_table(path: "str | None" = None) -> str:
     except (OSError, ValueError):
         return "(no BENCH_sim.json)"
     out = ["| workload | scale | scheduler | engine | build_s | cold_s | "
-           "warm_s | tasks/s | speedup | steals |",
-           "|---|---|---|---|---|---|---|---|---|---|"]
+           "warm_s | tasks/s | speedup | steals | reclaimed | reexec | "
+           "fault_lost |",
+           "|---|---|---|---|---|---|---|---|---|---|---|---|---|"]
     for r in doc.get("results", []):
         out.append(
             f"| {r['workload']} | {r['scale']} | {r['scheduler']} | "
@@ -96,7 +97,9 @@ def sim_bench_table(path: "str | None" = None) -> str:
             f"{_fmt(r.get('cold_s'), '.4f')} | "
             f"{_fmt(r.get('warm_s'), '.4f')} | "
             f"{_fmt(r.get('tasks_per_s'), '.0f')} | "
-            f"{_fmt(r.get('speedup'))} | {_fmt(r.get('steals'))} |")
+            f"{_fmt(r.get('speedup'))} | {_fmt(r.get('steals'))} | "
+            f"{_fmt(r.get('reclaimed'))} | {_fmt(r.get('reexec'))} | "
+            f"{_fmt(r.get('fault_lost'), '.2f')} |")
     return "\n".join(out)
 
 

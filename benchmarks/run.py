@@ -33,6 +33,8 @@ def main() -> None:
                                                          args.quick)),
         ("bots/figs13-15", lambda: bots_repro.fig_13_to_15(report,
                                                            args.quick)),
+        ("bots/trace-forensics",
+         lambda: bots_repro.fig_trace_forensics(report, args.quick)),
         ("sim-engine", lambda: framework.sim_engine(report, args.quick)),
         ("mesh-layout", lambda: framework.mesh_layout(report, args.quick)),
         ("moe-locality", lambda: framework.moe_locality(report, args.quick)),

@@ -13,7 +13,8 @@ from .sweep import (SweepConfig, SweepPlan, CellError, CellTimeout,
                     WorkerDied, RetryPolicy, run_sweep,
                     Stat, CellStats, aggregate)
 from .store import ResultStore, cell_key, workload_fingerprint
+from .trace import TraceBuffer
 from .compile_cache import (CompileCache, get_cache, reset_cache,
                             cache_root)
 from . import (bots, compile_cache, context, faults, machine, policy,
-               store, sweep)
+               store, sweep, trace)

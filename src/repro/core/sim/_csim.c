@@ -405,6 +405,190 @@ static int go_offline(fault_env_t *env, double now, int64_t th,
 }
 
 /* ------------------------------------------------------------------ */
+/* Event-trace capture (see sim/trace.py for the record semantics)    */
+/* ------------------------------------------------------------------ */
+
+/* Structure-of-arrays trace buffer. Capacity-planned from the task
+ * count (trace.plan_capacity mirrors this) and grown geometrically, so
+ * paper-scale traces amortize to O(1) allocations per event family.
+ * The arrays are malloc'd here and handed back to Python zero-copy
+ * (numpy views over the raw pointers; sim_trace_free releases them
+ * when the last view dies). */
+typedef struct {
+    int64_t *ex_task, *ex_thread, *ex_core, *ex_node, *ex_qlen;
+    double *ex_start, *ex_end;
+    double *st_time;
+    int64_t *st_thief, *st_victim, *st_task, *st_dist;
+    double *mg_time;
+    int64_t *mg_thread, *mg_from, *mg_to;
+    int64_t n_exec, n_steal, n_mig;
+    int64_t ex_cap, st_cap, mg_cap;
+} trace_t;
+
+static void trace_free_arrays(trace_t *tp)
+{
+    free(tp->ex_task); free(tp->ex_thread); free(tp->ex_core);
+    free(tp->ex_node); free(tp->ex_qlen);
+    free(tp->ex_start); free(tp->ex_end);
+    free(tp->st_time); free(tp->st_thief); free(tp->st_victim);
+    free(tp->st_task); free(tp->st_dist);
+    free(tp->mg_time); free(tp->mg_thread); free(tp->mg_from);
+    free(tp->mg_to);
+}
+
+/* Allocate a trace for an n_tasks run: every task commits exactly one
+ * exec event fault-free, so the exec family is exact up front; steal /
+ * migration counts are workload-dependent and start small. Returns
+ * NULL on allocation failure. */
+void *sim_trace_new(int64_t n_tasks)
+{
+    trace_t *tp = (trace_t *)calloc(1, sizeof(trace_t));
+    if (!tp)
+        return NULL;
+    int64_t n = n_tasks > 1 ? n_tasks : 1;
+    tp->ex_cap = n;
+    tp->st_cap = n / 8 > 64 ? n / 8 : 64;
+    tp->mg_cap = 64;
+    tp->ex_task = (int64_t *)malloc((size_t)tp->ex_cap * sizeof(int64_t));
+    tp->ex_thread = (int64_t *)malloc((size_t)tp->ex_cap * sizeof(int64_t));
+    tp->ex_core = (int64_t *)malloc((size_t)tp->ex_cap * sizeof(int64_t));
+    tp->ex_node = (int64_t *)malloc((size_t)tp->ex_cap * sizeof(int64_t));
+    tp->ex_qlen = (int64_t *)malloc((size_t)tp->ex_cap * sizeof(int64_t));
+    tp->ex_start = (double *)malloc((size_t)tp->ex_cap * sizeof(double));
+    tp->ex_end = (double *)malloc((size_t)tp->ex_cap * sizeof(double));
+    tp->st_time = (double *)malloc((size_t)tp->st_cap * sizeof(double));
+    tp->st_thief = (int64_t *)malloc((size_t)tp->st_cap * sizeof(int64_t));
+    tp->st_victim = (int64_t *)malloc((size_t)tp->st_cap * sizeof(int64_t));
+    tp->st_task = (int64_t *)malloc((size_t)tp->st_cap * sizeof(int64_t));
+    tp->st_dist = (int64_t *)malloc((size_t)tp->st_cap * sizeof(int64_t));
+    tp->mg_time = (double *)malloc((size_t)tp->mg_cap * sizeof(double));
+    tp->mg_thread = (int64_t *)malloc((size_t)tp->mg_cap * sizeof(int64_t));
+    tp->mg_from = (int64_t *)malloc((size_t)tp->mg_cap * sizeof(int64_t));
+    tp->mg_to = (int64_t *)malloc((size_t)tp->mg_cap * sizeof(int64_t));
+    if (!tp->ex_task || !tp->ex_thread || !tp->ex_core || !tp->ex_node ||
+        !tp->ex_qlen || !tp->ex_start || !tp->ex_end ||
+        !tp->st_time || !tp->st_thief || !tp->st_victim || !tp->st_task ||
+        !tp->st_dist ||
+        !tp->mg_time || !tp->mg_thread || !tp->mg_from || !tp->mg_to) {
+        trace_free_arrays(tp);
+        free(tp);
+        return NULL;
+    }
+    return tp;
+}
+
+void sim_trace_free(void *p)
+{
+    trace_t *tp = (trace_t *)p;
+    if (!tp)
+        return;
+    trace_free_arrays(tp);
+    free(tp);
+}
+
+/* Event counts: out3 = [n_exec, n_steal, n_mig]. */
+void sim_trace_counts(void *p, int64_t *out3)
+{
+    trace_t *tp = (trace_t *)p;
+    out3[0] = tp->n_exec;
+    out3[1] = tp->n_steal;
+    out3[2] = tp->n_mig;
+}
+
+/* Column pointers, in the trace.py ALL_COLS order:
+ * [ex_task, ex_thread, ex_core, ex_node, ex_qlen, ex_start, ex_end,
+ *  st_time, st_thief, st_victim, st_task, st_dist,
+ *  mg_time, mg_thread, mg_from, mg_to]. */
+void sim_trace_ptrs(void *p, void **out16)
+{
+    trace_t *tp = (trace_t *)p;
+    out16[0] = tp->ex_task;  out16[1] = tp->ex_thread;
+    out16[2] = tp->ex_core;  out16[3] = tp->ex_node;
+    out16[4] = tp->ex_qlen;  out16[5] = tp->ex_start;
+    out16[6] = tp->ex_end;
+    out16[7] = tp->st_time;  out16[8] = tp->st_thief;
+    out16[9] = tp->st_victim; out16[10] = tp->st_task;
+    out16[11] = tp->st_dist;
+    out16[12] = tp->mg_time; out16[13] = tp->mg_thread;
+    out16[14] = tp->mg_from; out16[15] = tp->mg_to;
+}
+
+#define TRACE_GROW(arr, ty, cap)                                        \
+    do {                                                                \
+        ty *nb_ = (ty *)realloc(tp->arr, (size_t)(cap) * sizeof(ty));   \
+        if (!nb_) return -1;                                            \
+        tp->arr = nb_;                                                  \
+    } while (0)
+
+static int trace_exec(trace_t *tp, int64_t task, int64_t th, int64_t core,
+                      int64_t node, int64_t qlen, double start, double end)
+{
+    int64_t i = tp->n_exec;
+    if (i >= tp->ex_cap) {
+        int64_t nc2 = tp->ex_cap * 2;
+        TRACE_GROW(ex_task, int64_t, nc2);
+        TRACE_GROW(ex_thread, int64_t, nc2);
+        TRACE_GROW(ex_core, int64_t, nc2);
+        TRACE_GROW(ex_node, int64_t, nc2);
+        TRACE_GROW(ex_qlen, int64_t, nc2);
+        TRACE_GROW(ex_start, double, nc2);
+        TRACE_GROW(ex_end, double, nc2);
+        tp->ex_cap = nc2;
+    }
+    tp->ex_task[i] = task;
+    tp->ex_thread[i] = th;
+    tp->ex_core[i] = core;
+    tp->ex_node[i] = node;
+    tp->ex_qlen[i] = qlen;
+    tp->ex_start[i] = start;
+    tp->ex_end[i] = end;
+    tp->n_exec = i + 1;
+    return 0;
+}
+
+static int trace_steal(trace_t *tp, double t, int64_t thief, int64_t victim,
+                       int64_t task, int64_t dist)
+{
+    int64_t i = tp->n_steal;
+    if (i >= tp->st_cap) {
+        int64_t nc2 = tp->st_cap * 2;
+        TRACE_GROW(st_time, double, nc2);
+        TRACE_GROW(st_thief, int64_t, nc2);
+        TRACE_GROW(st_victim, int64_t, nc2);
+        TRACE_GROW(st_task, int64_t, nc2);
+        TRACE_GROW(st_dist, int64_t, nc2);
+        tp->st_cap = nc2;
+    }
+    tp->st_time[i] = t;
+    tp->st_thief[i] = thief;
+    tp->st_victim[i] = victim;
+    tp->st_task[i] = task;
+    tp->st_dist[i] = dist;
+    tp->n_steal = i + 1;
+    return 0;
+}
+
+static int trace_mig(trace_t *tp, double t, int64_t th, int64_t from,
+                     int64_t to)
+{
+    int64_t i = tp->n_mig;
+    if (i >= tp->mg_cap) {
+        int64_t nc2 = tp->mg_cap * 2;
+        TRACE_GROW(mg_time, double, nc2);
+        TRACE_GROW(mg_thread, int64_t, nc2);
+        TRACE_GROW(mg_from, int64_t, nc2);
+        TRACE_GROW(mg_to, int64_t, nc2);
+        tp->mg_cap = nc2;
+    }
+    tp->mg_time[i] = t;
+    tp->mg_thread[i] = th;
+    tp->mg_from[i] = from;
+    tp->mg_to[i] = to;
+    tp->n_mig = i + 1;
+    return 0;
+}
+
+/* ------------------------------------------------------------------ */
 /* Simulator                                                          */
 /* ------------------------------------------------------------------ */
 
@@ -427,8 +611,27 @@ static int go_offline(fault_env_t *env, double now, int64_t th,
  * dout: [makespan, remote, total_exec, queue_wait, fault_lost, last_t]
  * iout: [steals, failed_probes, reclaimed, reexec, executed, steps,
  *        status(0 ok, 1 watchdog, 2 stranded work)]
+ * agg_steal_hops / agg_node_tasks / agg_node_remote: caller-allocated,
+ * zeroed aggregate counters (successful steals per hop distance, tasks
+ * executed per node, NUMA penalty time per node) — always recorded.
+ * trace: a sim_trace_new() handle for full event capture, or NULL; the
+ * untraced code path is a separate compilation of the loop with every
+ * recording site preprocessed out (see _csim_core.h).
  * returns 0 on success, negative on allocation failure.
  */
+
+#define CSIM_TRACED 0
+#define CSIM_NAME sim_run_notrace
+#include "_csim_core.h"
+#undef CSIM_TRACED
+#undef CSIM_NAME
+
+#define CSIM_TRACED 1
+#define CSIM_NAME sim_run_traced
+#include "_csim_core.h"
+#undef CSIM_TRACED
+#undef CSIM_NAME
+
 int sim_run(const double *dpar, const int64_t *ipar,
             const double *wp, const double *wpo,
             const double *fr, const double *fp,
@@ -446,374 +649,25 @@ int sim_run(const double *dpar, const int64_t *ipar,
             const int64_t *fwoff,          /* T+1 (faults) */
             const double *fwstart,         /* n_windows (faults) */
             const double *fwend,           /* n_windows (faults) */
-            double *dout, int64_t *iout)
+            double *dout, int64_t *iout,
+            int64_t *agg_steal_hops, int64_t *agg_node_tasks,
+            double *agg_node_remote, void *trace)
 {
-    const double hop_lambda = dpar[0], hop_lambda_steal = dpar[1];
-    const double lock_time = dpar[2], deque_lock_time = dpar[3];
-    const double steal_time = dpar[4], spawn_time = dpar[5];
-    const double wake_latency = dpar[6], qop_time = dpar[7];
-    const double cache_refill = dpar[8], mem_intensity = dpar[9];
-    const double migration_rate = dpar[10];
-    const int64_t T = ipar[0], num_cores = ipar[1], NN = ipar[2];
-    const int64_t n_tasks = ipar[3];
-    const int depth_first = !ipar[4];
-    const int wf_like = (int)ipar[5];
-    const uint32_t seed = (uint32_t)ipar[6];
-    const int64_t rdn = ipar[7];
-    const int64_t rnode0 = ipar[8];
-    const int has_faults = (int)ipar[9];
-    int64_t max_steps = ipar[10];
-    const double mu_lam = mem_intensity * hop_lambda;
-    if (max_steps <= 0)
-        max_steps = INT64_MAX;
-
-    int rc = -1;
-    rk_state rng;
-    rk_seed(&rng, seed);
-
-    int64_t *pending = (int64_t *)calloc((size_t)n_tasks, sizeof(int64_t));
-    int64_t *exec_node = (int64_t *)calloc((size_t)n_tasks, sizeof(int64_t));
-    uint8_t *phase = (uint8_t *)calloc((size_t)n_tasks, 1);
-    int64_t *order = (int64_t *)malloc((size_t)(T > 1 ? T : 1) * sizeof(int64_t));
-    int64_t *uidx = (int64_t *)malloc((size_t)(T > 1 ? T : 1) * sizeof(int64_t));
-    double *dl_free = (double *)calloc((size_t)T, sizeof(double));
-    ring_t *local = (ring_t *)calloc((size_t)T, sizeof(ring_t));
-    int64_t *wcur = (int64_t *)malloc((size_t)T * sizeof(int64_t));
-    if (!pending || !exec_node || !phase || !order || !uidx || !dl_free ||
-        !local || !wcur)
-        goto fail1;
-    if (has_faults)
-        for (int64_t i = 0; i < T; i++)
-            wcur[i] = fwoff[i];
-    for (int64_t i = 0; i < T; i++)
-        if (ring_init(&local[i], 256)) goto fail1;
-    ring_t shared;
-    if (ring_init(&shared, 1024)) goto fail1;
-    heap_t evq;
-    if (heap_init(&evq, (size_t)(2 * T + 8))) goto fail2;
-    pyset_t parked;
-    if (pyset_init(&parked)) goto fail3;
-
-    double sl_free = 0.0, sl_waited = 0.0;
-    double remote = 0.0, total_exec = 0.0, makespan = 0.0;
-    int64_t steals = 0, failed = 0, live = 1;
-    int64_t reclaimed = 0, reexec = 0, executed = 0, steps = 0, status = 0;
-    double fault_lost = 0.0, last_t = 0.0;
-    uint64_t seq = 0;
-    fault_env_t fenv = {&evq, &parked, local, &shared, fwend,
-                        wake_latency, depth_first, &seq, &reclaimed};
-
-    /* ignition: master runs the root, workers go hunting */
-    seq++; if (heap_push(&evq, 0.0, seq, 0, 0)) goto fail4;
-    for (int64_t th = 1; th < T; th++) {
-        seq++;
-        if (heap_push(&evq, 0.0, seq, (int32_t)th, -1)) goto fail4;
-    }
-
-    while (evq.len) {
-        ev_t ev = heap_pop(&evq);
-        double t = ev.t;
-        int64_t th = ev.th;
-        int64_t task = ev.task;
-
-        if (++steps > max_steps) {
-            status = 1;
-            last_t = t;
-            break;
-        }
-        if (has_faults) {
-            int64_t c = wcur[th];
-            const int64_t lim = fwoff[th + 1];
-            while (c < lim && fwend[c] <= t)
-                c++;
-            wcur[th] = c;
-            if (c < lim && fwstart[c] <= t) {
-                if (go_offline(&fenv, t, th, task, c)) goto fail4;
-                continue;
-            }
-        }
-
-        if (task < 0) {
-            /* ---- acquire: local pop / steal sweep / shared FIFO ---- */
-            if (depth_first) {
-                ring_t *lp = &local[th];
-                if (lp->len) {
-                    task = ring_pop_back(lp);
-                    if (rdn < 0)
-                        t += qop_time;
-                    else
-                        t += qop_time * (1.0 + hop_lambda_steal *
-                             (double)node_dist[core_node[cores[th]] * NN + rdn]);
-                } else {
-                    /* materialize one sweep from the compiled plan */
-                    int64_t n_order = 0;
-                    for (int64_t g = vp_group_off[th];
-                         g < vp_group_off[th + 1]; g++) {
-                        const int64_t u0 = vp_unit_off[g];
-                        const int64_t u1 = vp_unit_off[g + 1];
-                        const int64_t nu = u1 - u0;
-                        if (nu > 1) {
-                            for (int64_t k = 0; k < nu; k++)
-                                uidx[k] = u0 + k;
-                            rk_shuffle(&rng, uidx, nu);
-                            for (int64_t k = 0; k < nu; k++)
-                                for (int64_t j = vp_victim_off[uidx[k]];
-                                     j < vp_victim_off[uidx[k] + 1]; j++)
-                                    order[n_order++] = vp_victims[j];
-                        } else {
-                            for (int64_t j = vp_victim_off[u0];
-                                 j < vp_victim_off[u1]; j++)
-                                order[n_order++] = vp_victims[j];
-                        }
-                    }
-                    task = -1;
-                    const int64_t tn = core_node[cores[th]];
-                    for (int64_t k = 0; k < n_order; k++) {
-                        int64_t v = order[k];
-                        double d = (rdn < 0)
-                            ? (double)node_dist[tn * NN + core_node[cores[v]]]
-                            : (double)node_dist[tn * NN + rdn];
-                        t += steal_time * (1.0 + hop_lambda_steal * d);
-                        ring_t *lv = &local[v];
-                        if (lv->len) {
-                            double start = t > dl_free[v] ? t : dl_free[v];
-                            t = start + deque_lock_time;
-                            dl_free[v] = t;
-                            steals++;
-                            task = ring_pop_front(lv);
-                            break;
-                        }
-                        failed++;
-                    }
-                    if (task < 0) {
-                        if (live > 0 && pyset_add(&parked, th)) goto fail4;
-                        continue;
-                    }
-                }
-            } else {
-                /* breadth-first shared FIFO behind one lock */
-                if (!shared.len) {
-                    if (live > 0 && pyset_add(&parked, th)) goto fail4;
-                    continue;
-                }
-                double start = t > sl_free ? t : sl_free;
-                sl_waited += start - t;
-                t = start + lock_time;
-                sl_free = t;
-                if (!shared.len) {
-                    if (live > 0 && pyset_add(&parked, th)) goto fail4;
-                    continue;
-                }
-                task = ring_pop_front(&shared);
-            }
-        }
-
-        /* ---- run `task` on thread th at time t ---- */
-        if (migration_rate > 0.0 && rk_double(&rng) < migration_rate) {
-            /* randint(1) is special-cased by numpy: no draw consumed */
-            cores[th] = (num_cores > 1)
-                ? (int64_t)rk_interval(&rng, (uint32_t)(num_cores - 1)) : 0;
-            t += cache_refill;
-        }
-        const int64_t core = cores[th];
-        const int64_t n = core_node[core];
-        exec_node[task] = n;
-        const int64_t pr = par[task];
-        const int64_t pn = pr >= 0 ? exec_node[pr] : rnode0;
-        double pen = mu_lam * (fr[task] * root_dist[n] +
-                               fp[task] * (double)node_dist[n * NN + pn]);
-        double w = wp[task];
-        double cost = w * (1.0 + pen);
-        if (has_faults) {
-            cost = cost * fspeed[core];
-            int64_t c = wcur[th];
-            const int64_t lim = fwoff[th + 1];
-            /* t advanced during acquire (probes, locks): windows may
-             * have closed — or opened — since the top-of-loop check. */
-            while (c < lim && fwend[c] <= t)
-                c++;
-            wcur[th] = c;
-            if (c < lim && fwstart[c] < t + cost) {
-                /* preempted/killed mid-execution: partial work is lost
-                 * and the task re-executes */
-                double s = fwstart[c];
-                if (s < t)
-                    s = t;
-                fault_lost += s - t;
-                reexec++;
-                if (go_offline(&fenv, s, th, task, c)) goto fail4;
-                continue;
-            }
-        }
-        remote += w * pen;
-        total_exec += cost;
-        t += cost;
-        executed++;
-
-        const int64_t nk = nc[task];
-        if (nk) {
-            const int64_t base = fc[task];
-            pending[task] = nk;
-            live += nk;
-            t += spawn_time * (double)nk;
-            double qc = (rdn < 0) ? qop_time
-                : qop_time * (1.0 + hop_lambda_steal *
-                              (double)node_dist[n * NN + rdn]);
-            if (wf_like) {
-                /* dive into first child; queue the rest newest-first */
-                ring_t *lp = &local[th];
-                for (int64_t k = base + nk - 1; k > base; k--) {
-                    t += qc;
-                    if (ring_push_back(lp, k)) goto fail4;
-                    if (parked.used) {
-                        seq++;
-                        if (heap_push(&evq, t + wake_latency, seq,
-                                      (int32_t)pyset_pop(&parked), -1))
-                            goto fail4;
-                    }
-                }
-                seq++;
-                if (heap_push(&evq, t, seq, (int32_t)th, base)) goto fail4;
-                continue;
-            }
-            if (depth_first) { /* cilk: queue all, re-acquire own front */
-                ring_t *lp = &local[th];
-                for (int64_t k = base + nk - 1; k >= base; k--) {
-                    t += qc;
-                    if (ring_push_back(lp, k)) goto fail4;
-                    if (parked.used) {
-                        seq++;
-                        if (heap_push(&evq, t + wake_latency, seq,
-                                      (int32_t)pyset_pop(&parked), -1))
-                            goto fail4;
-                    }
-                }
-            } else { /* bf: shared FIFO in spawn order */
-                for (int64_t k = base; k < base + nk; k++) {
-                    double start = t > sl_free ? t : sl_free;
-                    sl_waited += start - t;
-                    t = start + lock_time;
-                    sl_free = t;
-                    if (ring_push_back(&shared, k)) goto fail4;
-                    if (parked.used) {
-                        seq++;
-                        if (heap_push(&evq, t + wake_latency, seq,
-                                      (int32_t)pyset_pop(&parked), -1))
-                            goto fail4;
-                    }
-                }
-            }
-            seq++;
-            if (heap_push(&evq, t, seq, (int32_t)th, -1)) goto fail4;
-            continue;
-        }
-
-        /* ---- leaf: propagate completion up the tree ---- */
-        live--;
-        int64_t node = task;
-        while (1) {
-            int64_t parent = par[node];
-            if (parent < 0)
-                break;
-            int64_t pd = --pending[parent];
-            if (pd > 0)
-                break;
-            if (phase[parent] == 0 && npw[parent]) {
-                /* taskwait passed: spawn the parallel combine wave */
-                phase[parent] = 1;
-                int64_t k = npw[parent];
-                int64_t fp0 = fpw[parent];
-                pending[parent] = k;
-                live += k;
-                t += spawn_time * (double)k;
-                if (depth_first) {
-                    double qc = (rdn < 0) ? qop_time
-                        : qop_time * (1.0 + hop_lambda_steal *
-                                      (double)node_dist[core_node[cores[th]] * NN + rdn]);
-                    ring_t *lp = &local[th];
-                    for (int64_t j = fp0 + k - 1; j >= fp0; j--) {
-                        t += qc;
-                        if (ring_push_back(lp, j)) goto fail4;
-                        if (parked.used) {
-                            seq++;
-                            if (heap_push(&evq, t + wake_latency, seq,
-                                          (int32_t)pyset_pop(&parked), -1))
-                                goto fail4;
-                        }
-                    }
-                } else {
-                    for (int64_t j = fp0 + k - 1; j >= fp0; j--) {
-                        double start = t > sl_free ? t : sl_free;
-                        sl_waited += start - t;
-                        t = start + lock_time;
-                        sl_free = t;
-                        if (ring_push_back(&shared, j)) goto fail4;
-                        if (parked.used) {
-                            seq++;
-                            if (heap_push(&evq, t + wake_latency, seq,
-                                          (int32_t)pyset_pop(&parked), -1))
-                                goto fail4;
-                        }
-                    }
-                }
-                break;
-            }
-            double w2 = wpo[parent];
-            if (w2 > 0.0) {
-                /* join continuation with the parent's locality profile */
-                int64_t pn2 = exec_node[parent];
-                double pen2 = mu_lam * (fr[parent] * root_dist[n] +
-                                        fp[parent] * (double)node_dist[n * NN + pn2]);
-                double c2 = w2 * (1.0 + pen2);
-                if (has_faults)
-                    c2 = c2 * fspeed[core];
-                remote += w2 * pen2;
-                total_exec += c2;
-                t += c2;
-            }
-            node = parent;
-        }
-        if (t > makespan)
-            makespan = t;
-        seq++;
-        if (heap_push(&evq, t, seq, (int32_t)th, -1)) goto fail4;
-    }
-
-    if (status == 0 && executed != n_tasks)
-        status = 2;             /* loop drained with work stranded */
-    if (status != 1)
-        last_t = makespan;
-    dout[0] = makespan;
-    dout[1] = remote;
-    dout[2] = total_exec;
-    dout[3] = sl_waited;
-    dout[4] = fault_lost;
-    dout[5] = last_t;
-    iout[0] = steals;
-    iout[1] = failed;
-    iout[2] = reclaimed;
-    iout[3] = reexec;
-    iout[4] = executed;
-    iout[5] = steps;
-    iout[6] = status;
-    rc = 0;
-
-fail4:
-    pyset_free(&parked);
-fail3:
-    free(evq.e);
-fail2:
-    free(shared.buf);
-fail1:
-    if (local)
-        for (int64_t i = 0; i < T; i++)
-            free(local[i].buf);
-    free(wcur);
-    free(local); free(dl_free); free(uidx); free(order);
-    free(phase); free(exec_node); free(pending);
-    return rc;
+    if (trace)
+        return sim_run_traced(dpar, ipar, wp, wpo, fr, fp, fc, nc, fpw,
+                              npw, par, core_node, node_dist, root_dist,
+                              cores, vp_group_off, vp_unit_off,
+                              vp_victim_off, vp_victims, fspeed, fwoff,
+                              fwstart, fwend, dout, iout, agg_steal_hops,
+                              agg_node_tasks, agg_node_remote,
+                              (trace_t *)trace);
+    return sim_run_notrace(dpar, ipar, wp, wpo, fr, fp, fc, nc, fpw,
+                           npw, par, core_node, node_dist, root_dist,
+                           cores, vp_group_off, vp_unit_off,
+                           vp_victim_off, vp_victims, fspeed, fwoff,
+                           fwstart, fwend, dout, iout, agg_steal_hops,
+                           agg_node_tasks, agg_node_remote, NULL);
 }
-
 /* ------------------------------------------------------------------ */
 /* Batched sweep entry — multi-threaded cell dispatch                 */
 /* ------------------------------------------------------------------ */
@@ -827,7 +681,7 @@ fail1:
 
 typedef struct {
     int64_t n_cfg;
-    void **a[23];        /* the 23 per-config pointer tables, in order */
+    void **a[27];        /* the 27 per-config pointer tables, in order */
     double *dout;        /* 6 slots per config */
     int64_t *iout;       /* 7 slots per config */
     int64_t *rc;         /* per-config sim_run return code */
@@ -851,7 +705,9 @@ static void batch_run_one(batch_t *b, int64_t i)
         (const int64_t *)a[17][i], (const int64_t *)a[18][i],
         (const double *)a[19][i], (const int64_t *)a[20][i],
         (const double *)a[21][i], (const double *)a[22][i],
-        b->dout + 6 * i, b->iout + 7 * i);
+        b->dout + 6 * i, b->iout + 7 * i,
+        (int64_t *)a[23][i], (int64_t *)a[24][i],
+        (double *)a[25][i], a[26][i]);
 }
 
 #ifndef CSIM_NO_THREADS
@@ -895,6 +751,8 @@ int64_t sim_run_batch(int64_t n_cfg, int64_t n_workers,
                       void **vp_victim_off, void **vp_victims,
                       void **fspeed, void **fwoff,
                       void **fwstart, void **fwend,
+                      void **agg_steal_hops, void **agg_node_tasks,
+                      void **agg_node_remote, void **trace,
                       double *dout, int64_t *iout, int64_t *rc_out)
 {
     batch_t b;
@@ -908,6 +766,8 @@ int64_t sim_run_batch(int64_t n_cfg, int64_t n_workers,
     b.a[17] = vp_victim_off; b.a[18] = vp_victims;
     b.a[19] = fspeed; b.a[20] = fwoff;
     b.a[21] = fwstart; b.a[22] = fwend;
+    b.a[23] = agg_steal_hops; b.a[24] = agg_node_tasks;
+    b.a[25] = agg_node_remote; b.a[26] = trace;
     b.dout = dout;
     b.iout = iout;
     b.rc = rc_out;

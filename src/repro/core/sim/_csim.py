@@ -35,6 +35,10 @@ import warnings
 import numpy as np
 
 _SRC = os.path.join(os.path.dirname(__file__), "_csim.c")
+# headers textually included into _csim.c; they never appear on the
+# compile command line but must participate in the artifact hash, or a
+# header-only change would keep serving a stale cached kernel.
+_HDRS = (os.path.join(os.path.dirname(__file__), "_csim_core.h"),)
 _CFLAGS = ["-O2", "-fPIC", "-shared", "-ffp-contract=off"]
 
 _lib = None
@@ -179,8 +183,10 @@ def _build() -> tuple[str, bool]:
     ``-pthread`` gets a ``-DCSIM_NO_THREADS`` build (serial batch loop,
     identical results) instead.
     """
-    with open(_SRC, "rb") as f:
-        src = f.read()
+    src = b""
+    for path in (_SRC, *_HDRS):
+        with open(path, "rb") as f:
+            src += f.read()
     cache_dir = _csim_dir()
     cc = _resolve_cc()
     cc_ver = _cc_version(cc, cache_dir) if cc is not None else "none"
@@ -214,13 +220,24 @@ def load():
             _i64p, _i64p, _i64p, _i64p,       # victim plan (goff/uoff/voff/v)
             _f64p, _i64p, _f64p, _f64p,       # fault plan (speed/off/start/end)
             _f64p, _i64p,                     # dout, iout
+            _i64p, _i64p, _f64p,              # agg steal_hops/node_tasks/remote
+            ct.c_void_p,                      # trace handle (NULL = untraced)
         ]
         lib.sim_run_batch.restype = ct.c_int64
-        # n_cfg, n_workers, 23 arrays of per-config pointers, then flat
+        # n_cfg, n_workers, 27 arrays of per-config pointers, then flat
         # outputs + per-config return codes
         lib.sim_run_batch.argtypes = (
-            [ct.c_int64, ct.c_int64] + [_uptr] * 23
+            [ct.c_int64, ct.c_int64] + [_uptr] * 27
             + [_f64p, _i64p, _i64p])
+        lib.sim_trace_new.restype = ct.c_void_p
+        lib.sim_trace_new.argtypes = [ct.c_int64]
+        lib.sim_trace_free.restype = None
+        lib.sim_trace_free.argtypes = [ct.c_void_p]
+        lib.sim_trace_counts.restype = None
+        lib.sim_trace_counts.argtypes = [ct.c_void_p, _i64p]
+        lib.sim_trace_ptrs.restype = None
+        lib.sim_trace_ptrs.argtypes = [ct.c_void_p,
+                                       ct.POINTER(ct.c_void_p)]
         lib.sim_threads_available.restype = ct.c_int
         lib.sim_threads_available.argtypes = []
         lib.mt_selftest.restype = None
@@ -280,7 +297,14 @@ def _marshal(ctx):
             cores,
             goff, uoff, voff, victims,
             fspeed, fwoff, fwstart, fwend)
-    return args, cores
+    # always-on aggregate output slots (zeroed; the kernel increments)
+    max_hop = ctx.get("max_hop")
+    if max_hop is None:
+        max_hop = int(ctx["node_dist_flat"].max())
+    aggs = (np.zeros(max_hop + 1, dtype=np.int64),
+            np.zeros(ctx["num_nodes"], dtype=np.int64),
+            np.zeros(ctx["num_nodes"], dtype=np.float64))
+    return args, cores, aggs
 
 
 def _unpack(dout, iout):
@@ -293,18 +317,85 @@ def _unpack(dout, iout):
                 status=int(iout[6]))
 
 
+class _TraceStorage:
+    """Keeps one kernel-allocated trace alive under its numpy views.
+
+    ``TraceBuffer.from_arrays`` retains this as ``_owner``; the malloc'd
+    columns are released when the last view drops it.
+    """
+    __slots__ = ("_free", "_ptr")
+
+    def __init__(self, lib, ptr):
+        self._free = lib.sim_trace_free
+        self._ptr = ptr
+
+    def close(self):
+        ptr, self._ptr = self._ptr, None
+        if ptr:
+            self._free(ptr)
+
+    def __del__(self):
+        self.close()
+
+
+def _new_trace(lib, ctx):
+    """Allocate a kernel trace handle for a prepared context (or None)."""
+    if not ctx.get("trace"):
+        return None
+    tp = lib.sim_trace_new(ctx["table"].n)
+    if not tp:
+        raise MemoryError("C sim kernel could not allocate a trace buffer")
+    return tp
+
+
+def _wrap_trace(lib, tp):
+    """Wrap a filled kernel trace zero-copy into a TraceBuffer."""
+    from .trace import ALL_COLS, TraceBuffer
+    counts = np.zeros(3, dtype=np.int64)
+    lib.sim_trace_counts(tp, counts)
+    lens = [int(counts[0])] * 7 + [int(counts[1])] * 5 + [int(counts[2])] * 4
+    ptrs = (ct.c_void_p * 16)()
+    lib.sim_trace_ptrs(tp, ptrs)
+    owner = _TraceStorage(lib, tp)
+    arrays = {}
+    for (name, dt), p, ln in zip(ALL_COLS, ptrs, lens):
+        cty = ct.c_double if dt is np.float64 else ct.c_int64
+        arrays[name] = np.ctypeslib.as_array(ct.cast(p, ct.POINTER(cty)),
+                                             shape=(ln,))
+    return TraceBuffer.from_arrays(arrays, owner=owner)
+
+
+def _attach_extras(out, aggs, lib, tp):
+    # plain lists, matching the py engine's raw dicts: run_batch output
+    # slots stay comparable / cheaply picklable
+    out["steal_hops"] = [int(x) for x in aggs[0]]
+    out["node_tasks"] = [int(x) for x in aggs[1]]
+    out["node_remote"] = [float(x) for x in aggs[2]]
+    if tp:
+        out["trace"] = _wrap_trace(lib, tp)
+    return out
+
+
 def run(ctx) -> dict:
     """Run the C kernel on a prepared simulation context (see runtime)."""
     lib = load()
     assert lib is not None
-    args, cores = _marshal(ctx)
+    args, cores, aggs = _marshal(ctx)
     dout = np.zeros(6, dtype=np.float64)
     iout = np.zeros(7, dtype=np.int64)
-    rc = lib.sim_run(*args, dout, iout)
+    tp = _new_trace(lib, ctx)
+    try:
+        rc = lib.sim_run(*args, dout, iout, *aggs, tp)
+    except BaseException:
+        if tp:
+            lib.sim_trace_free(tp)
+        raise
     if rc != 0:
+        if tp:
+            lib.sim_trace_free(tp)
         raise MemoryError(f"C sim kernel failed with code {rc}")
     ctx["cores"][:] = [int(c) for c in cores]  # migration mutates bindings
-    return _unpack(dout, iout)
+    return _attach_extras(_unpack(dout, iout), aggs, lib, tp)
 
 
 def run_batch(ctxs, workers: int = 1) -> list:
@@ -336,27 +427,52 @@ def run_batch(ctxs, workers: int = 1) -> list:
         workers = 1
     n = len(ctxs)
     marshalled = [_marshal(ctx) for ctx in ctxs]
-    # 23 pointer tables, one per kernel parameter position
+    # per-cell trace slots: a kernel trace handle per traced config,
+    # NULL (0) for the rest — traced and untraced cells mix freely in
+    # one batch, each cell running its compiled-in variant of the loop
+    tptrs = []
+    try:
+        for ctx in ctxs:
+            tptrs.append(_new_trace(lib, ctx) or 0)
+    except BaseException:
+        for tp in tptrs:
+            if tp:
+                lib.sim_trace_free(tp)
+        raise
+    # 27 pointer tables, one per kernel parameter position
     ptr_tables = [
         np.ascontiguousarray(
             [m[0][k].ctypes.data for m in marshalled], dtype=np.uintp)
         for k in range(23)
-    ]
+    ] + [
+        np.ascontiguousarray(
+            [m[2][k].ctypes.data for m in marshalled], dtype=np.uintp)
+        for k in range(3)
+    ] + [np.ascontiguousarray(tptrs, dtype=np.uintp)]
     dout = np.zeros(6 * n, dtype=np.float64)
     iout = np.zeros(7 * n, dtype=np.int64)
     rcs = np.zeros(n, dtype=np.int64)
-    nfail = lib.sim_run_batch(n, max(int(workers), 1), *ptr_tables,
-                              dout, iout, rcs)
-    for ctx, (_, cores) in zip(ctxs, marshalled):
+    try:
+        nfail = lib.sim_run_batch(n, max(int(workers), 1), *ptr_tables,
+                                  dout, iout, rcs)
+    except BaseException:
+        for tp in tptrs:
+            if tp:
+                lib.sim_trace_free(tp)
+        raise
+    for ctx, (_, cores, _aggs) in zip(ctxs, marshalled):
         ctx["cores"][:] = [int(c) for c in cores]
     out = []
     for i in range(n):
         if rcs[i] != 0:
+            if tptrs[i]:
+                lib.sim_trace_free(tptrs[i])
             out.append(MemoryError(
                 f"C sim kernel failed with code {int(rcs[i])} "
                 f"on batch config {i} of {n}"))
         else:
-            out.append(_unpack(dout[6 * i:6 * i + 6],
-                               iout[7 * i:7 * i + 7]))
+            out.append(_attach_extras(
+                _unpack(dout[6 * i:6 * i + 6], iout[7 * i:7 * i + 7]),
+                marshalled[i][2], lib, tptrs[i]))
     assert nfail == sum(isinstance(o, Exception) for o in out)
     return out

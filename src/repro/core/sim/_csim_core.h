@@ -1,0 +1,440 @@
+/* Event-loop body of the simulator, included twice from _csim.c:
+ *
+ *     #define CSIM_TRACED 0
+ *     #define CSIM_NAME sim_run_notrace
+ *     #include "_csim_core.h"
+ *
+ * and again with CSIM_TRACED 1 / CSIM_NAME sim_run_trace. The traced
+ * variant records exec/steal/migration events into a trace_t (defined
+ * in _csim.c before inclusion); in the untraced variant every
+ * recording site is compiled out entirely, so the hot path that the
+ * golden fixtures and the warm-perf gate measure is untouched by the
+ * tracing subsystem. The cheap always-on locality aggregates
+ * (agg_steal_hops / agg_node_tasks / agg_node_remote, caller-allocated
+ * and zeroed) are updated in both variants.
+ *
+ * Semantics are a bit-exact transcription of _engine_py.run; see the
+ * sim_run contract comment in _csim.c for the parameter layout.
+ */
+
+static int CSIM_NAME(
+            const double *dpar, const int64_t *ipar,
+            const double *wp, const double *wpo,
+            const double *fr, const double *fp,
+            const int64_t *fc, const int64_t *nc,
+            const int64_t *fpw, const int64_t *npw,
+            const int64_t *par,
+            const int64_t *core_node, const int64_t *node_dist,
+            const double *root_dist,
+            int64_t *cores,
+            const int64_t *vp_group_off,   /* T+1 */
+            const int64_t *vp_unit_off,    /* n_groups+1 */
+            const int64_t *vp_victim_off,  /* n_units+1 */
+            const int64_t *vp_victims,     /* total victim slots */
+            const double *fspeed,          /* num_cores (faults) */
+            const int64_t *fwoff,          /* T+1 (faults) */
+            const double *fwstart,         /* n_windows (faults) */
+            const double *fwend,           /* n_windows (faults) */
+            double *dout, int64_t *iout,
+            int64_t *agg_steal_hops,       /* max_hop+1, zeroed */
+            int64_t *agg_node_tasks,       /* num_nodes, zeroed */
+            double *agg_node_remote,       /* num_nodes, zeroed */
+            trace_t *tp)
+{
+    const double hop_lambda = dpar[0], hop_lambda_steal = dpar[1];
+    const double lock_time = dpar[2], deque_lock_time = dpar[3];
+    const double steal_time = dpar[4], spawn_time = dpar[5];
+    const double wake_latency = dpar[6], qop_time = dpar[7];
+    const double cache_refill = dpar[8], mem_intensity = dpar[9];
+    const double migration_rate = dpar[10];
+    const int64_t T = ipar[0], num_cores = ipar[1], NN = ipar[2];
+    const int64_t n_tasks = ipar[3];
+    const int depth_first = !ipar[4];
+    const int wf_like = (int)ipar[5];
+    const uint32_t seed = (uint32_t)ipar[6];
+    const int64_t rdn = ipar[7];
+    const int64_t rnode0 = ipar[8];
+    const int has_faults = (int)ipar[9];
+    int64_t max_steps = ipar[10];
+    const double mu_lam = mem_intensity * hop_lambda;
+    if (max_steps <= 0)
+        max_steps = INT64_MAX;
+#if !CSIM_TRACED
+    (void)tp;
+#endif
+
+    int rc = -1;
+    rk_state rng;
+    rk_seed(&rng, seed);
+
+    int64_t *pending = (int64_t *)calloc((size_t)n_tasks, sizeof(int64_t));
+    int64_t *exec_node = (int64_t *)calloc((size_t)n_tasks, sizeof(int64_t));
+    uint8_t *phase = (uint8_t *)calloc((size_t)n_tasks, 1);
+    int64_t *order = (int64_t *)malloc((size_t)(T > 1 ? T : 1) * sizeof(int64_t));
+    int64_t *uidx = (int64_t *)malloc((size_t)(T > 1 ? T : 1) * sizeof(int64_t));
+    double *dl_free = (double *)calloc((size_t)T, sizeof(double));
+    ring_t *local = (ring_t *)calloc((size_t)T, sizeof(ring_t));
+    int64_t *wcur = (int64_t *)malloc((size_t)T * sizeof(int64_t));
+    if (!pending || !exec_node || !phase || !order || !uidx || !dl_free ||
+        !local || !wcur)
+        goto fail1;
+    if (has_faults)
+        for (int64_t i = 0; i < T; i++)
+            wcur[i] = fwoff[i];
+    for (int64_t i = 0; i < T; i++)
+        if (ring_init(&local[i], 256)) goto fail1;
+    ring_t shared;
+    if (ring_init(&shared, 1024)) goto fail1;
+    heap_t evq;
+    if (heap_init(&evq, (size_t)(2 * T + 8))) goto fail2;
+    pyset_t parked;
+    if (pyset_init(&parked)) goto fail3;
+
+    double sl_free = 0.0, sl_waited = 0.0;
+    double remote = 0.0, total_exec = 0.0, makespan = 0.0;
+    int64_t steals = 0, failed = 0, live = 1;
+    int64_t reclaimed = 0, reexec = 0, executed = 0, steps = 0, status = 0;
+    double fault_lost = 0.0, last_t = 0.0;
+    uint64_t seq = 0;
+    fault_env_t fenv = {&evq, &parked, local, &shared, fwend,
+                        wake_latency, depth_first, &seq, &reclaimed};
+
+    /* ignition: master runs the root, workers go hunting */
+    seq++; if (heap_push(&evq, 0.0, seq, 0, 0)) goto fail4;
+    for (int64_t th = 1; th < T; th++) {
+        seq++;
+        if (heap_push(&evq, 0.0, seq, (int32_t)th, -1)) goto fail4;
+    }
+
+    while (evq.len) {
+        ev_t ev = heap_pop(&evq);
+        double t = ev.t;
+        int64_t th = ev.th;
+        int64_t task = ev.task;
+
+        if (++steps > max_steps) {
+            status = 1;
+            last_t = t;
+            break;
+        }
+        if (has_faults) {
+            int64_t c = wcur[th];
+            const int64_t lim = fwoff[th + 1];
+            while (c < lim && fwend[c] <= t)
+                c++;
+            wcur[th] = c;
+            if (c < lim && fwstart[c] <= t) {
+                if (go_offline(&fenv, t, th, task, c)) goto fail4;
+                continue;
+            }
+        }
+
+        if (task < 0) {
+            /* ---- acquire: local pop / steal sweep / shared FIFO ---- */
+            if (depth_first) {
+                ring_t *lp = &local[th];
+                if (lp->len) {
+                    task = ring_pop_back(lp);
+                    if (rdn < 0)
+                        t += qop_time;
+                    else
+                        t += qop_time * (1.0 + hop_lambda_steal *
+                             (double)node_dist[core_node[cores[th]] * NN + rdn]);
+                } else {
+                    /* materialize one sweep from the compiled plan */
+                    int64_t n_order = 0;
+                    for (int64_t g = vp_group_off[th];
+                         g < vp_group_off[th + 1]; g++) {
+                        const int64_t u0 = vp_unit_off[g];
+                        const int64_t u1 = vp_unit_off[g + 1];
+                        const int64_t nu = u1 - u0;
+                        if (nu > 1) {
+                            for (int64_t k = 0; k < nu; k++)
+                                uidx[k] = u0 + k;
+                            rk_shuffle(&rng, uidx, nu);
+                            for (int64_t k = 0; k < nu; k++)
+                                for (int64_t j = vp_victim_off[uidx[k]];
+                                     j < vp_victim_off[uidx[k] + 1]; j++)
+                                    order[n_order++] = vp_victims[j];
+                        } else {
+                            for (int64_t j = vp_victim_off[u0];
+                                 j < vp_victim_off[u1]; j++)
+                                order[n_order++] = vp_victims[j];
+                        }
+                    }
+                    task = -1;
+                    const int64_t tn = core_node[cores[th]];
+                    for (int64_t k = 0; k < n_order; k++) {
+                        int64_t v = order[k];
+                        double d = (rdn < 0)
+                            ? (double)node_dist[tn * NN + core_node[cores[v]]]
+                            : (double)node_dist[tn * NN + rdn];
+                        t += steal_time * (1.0 + hop_lambda_steal * d);
+                        ring_t *lv = &local[v];
+                        if (lv->len) {
+                            double start = t > dl_free[v] ? t : dl_free[v];
+                            t = start + deque_lock_time;
+                            dl_free[v] = t;
+                            steals++;
+                            task = ring_pop_front(lv);
+                            /* hop distance thief-core -> victim-core
+                             * (the stolen task's data locality,
+                             * independent of the probe cost, which
+                             * models queue metadata placement) */
+                            {
+                                const int64_t sd =
+                                    node_dist[tn * NN + core_node[cores[v]]];
+                                agg_steal_hops[sd]++;
+#if CSIM_TRACED
+                                if (trace_steal(tp, t, th, v, task, sd))
+                                    goto fail4;
+#endif
+                            }
+                            break;
+                        }
+                        failed++;
+                    }
+                    if (task < 0) {
+                        if (live > 0 && pyset_add(&parked, th)) goto fail4;
+                        continue;
+                    }
+                }
+            } else {
+                /* breadth-first shared FIFO behind one lock */
+                if (!shared.len) {
+                    if (live > 0 && pyset_add(&parked, th)) goto fail4;
+                    continue;
+                }
+                double start = t > sl_free ? t : sl_free;
+                sl_waited += start - t;
+                t = start + lock_time;
+                sl_free = t;
+                if (!shared.len) {
+                    if (live > 0 && pyset_add(&parked, th)) goto fail4;
+                    continue;
+                }
+                task = ring_pop_front(&shared);
+            }
+        }
+
+        /* ---- run `task` on thread th at time t ---- */
+        if (migration_rate > 0.0 && rk_double(&rng) < migration_rate) {
+#if CSIM_TRACED
+            const int64_t mig_from = cores[th];
+#endif
+            /* randint(1) is special-cased by numpy: no draw consumed */
+            cores[th] = (num_cores > 1)
+                ? (int64_t)rk_interval(&rng, (uint32_t)(num_cores - 1)) : 0;
+            t += cache_refill;
+#if CSIM_TRACED
+            if (trace_mig(tp, t, th, mig_from, cores[th])) goto fail4;
+#endif
+        }
+        const int64_t core = cores[th];
+        const int64_t n = core_node[core];
+        exec_node[task] = n;
+        const int64_t pr = par[task];
+        const int64_t pn = pr >= 0 ? exec_node[pr] : rnode0;
+        double pen = mu_lam * (fr[task] * root_dist[n] +
+                               fp[task] * (double)node_dist[n * NN + pn]);
+        double w = wp[task];
+        double cost = w * (1.0 + pen);
+        if (has_faults) {
+            cost = cost * fspeed[core];
+            int64_t c = wcur[th];
+            const int64_t lim = fwoff[th + 1];
+            /* t advanced during acquire (probes, locks): windows may
+             * have closed — or opened — since the top-of-loop check. */
+            while (c < lim && fwend[c] <= t)
+                c++;
+            wcur[th] = c;
+            if (c < lim && fwstart[c] < t + cost) {
+                /* preempted/killed mid-execution: partial work is lost
+                 * and the task re-executes */
+                double s = fwstart[c];
+                if (s < t)
+                    s = t;
+                fault_lost += s - t;
+                reexec++;
+                if (go_offline(&fenv, s, th, task, c)) goto fail4;
+                continue;
+            }
+        }
+        remote += w * pen;
+        total_exec += cost;
+        agg_node_tasks[n]++;
+        agg_node_remote[n] += w * pen;
+#if CSIM_TRACED
+        if (trace_exec(tp, task, th, core, n,
+                       depth_first ? (int64_t)local[th].len
+                                   : (int64_t)shared.len,
+                       t, t + cost))
+            goto fail4;
+#endif
+        t += cost;
+        executed++;
+
+        const int64_t nk = nc[task];
+        if (nk) {
+            const int64_t base = fc[task];
+            pending[task] = nk;
+            live += nk;
+            t += spawn_time * (double)nk;
+            double qc = (rdn < 0) ? qop_time
+                : qop_time * (1.0 + hop_lambda_steal *
+                              (double)node_dist[n * NN + rdn]);
+            if (wf_like) {
+                /* dive into first child; queue the rest newest-first */
+                ring_t *lp = &local[th];
+                for (int64_t k = base + nk - 1; k > base; k--) {
+                    t += qc;
+                    if (ring_push_back(lp, k)) goto fail4;
+                    if (parked.used) {
+                        seq++;
+                        if (heap_push(&evq, t + wake_latency, seq,
+                                      (int32_t)pyset_pop(&parked), -1))
+                            goto fail4;
+                    }
+                }
+                seq++;
+                if (heap_push(&evq, t, seq, (int32_t)th, base)) goto fail4;
+                continue;
+            }
+            if (depth_first) { /* cilk: queue all, re-acquire own front */
+                ring_t *lp = &local[th];
+                for (int64_t k = base + nk - 1; k >= base; k--) {
+                    t += qc;
+                    if (ring_push_back(lp, k)) goto fail4;
+                    if (parked.used) {
+                        seq++;
+                        if (heap_push(&evq, t + wake_latency, seq,
+                                      (int32_t)pyset_pop(&parked), -1))
+                            goto fail4;
+                    }
+                }
+            } else { /* bf: shared FIFO in spawn order */
+                for (int64_t k = base; k < base + nk; k++) {
+                    double start = t > sl_free ? t : sl_free;
+                    sl_waited += start - t;
+                    t = start + lock_time;
+                    sl_free = t;
+                    if (ring_push_back(&shared, k)) goto fail4;
+                    if (parked.used) {
+                        seq++;
+                        if (heap_push(&evq, t + wake_latency, seq,
+                                      (int32_t)pyset_pop(&parked), -1))
+                            goto fail4;
+                    }
+                }
+            }
+            seq++;
+            if (heap_push(&evq, t, seq, (int32_t)th, -1)) goto fail4;
+            continue;
+        }
+
+        /* ---- leaf: propagate completion up the tree ---- */
+        live--;
+        int64_t node = task;
+        while (1) {
+            int64_t parent = par[node];
+            if (parent < 0)
+                break;
+            int64_t pd = --pending[parent];
+            if (pd > 0)
+                break;
+            if (phase[parent] == 0 && npw[parent]) {
+                /* taskwait passed: spawn the parallel combine wave */
+                phase[parent] = 1;
+                int64_t k = npw[parent];
+                int64_t fp0 = fpw[parent];
+                pending[parent] = k;
+                live += k;
+                t += spawn_time * (double)k;
+                if (depth_first) {
+                    double qc = (rdn < 0) ? qop_time
+                        : qop_time * (1.0 + hop_lambda_steal *
+                                      (double)node_dist[core_node[cores[th]] * NN + rdn]);
+                    ring_t *lp = &local[th];
+                    for (int64_t j = fp0 + k - 1; j >= fp0; j--) {
+                        t += qc;
+                        if (ring_push_back(lp, j)) goto fail4;
+                        if (parked.used) {
+                            seq++;
+                            if (heap_push(&evq, t + wake_latency, seq,
+                                          (int32_t)pyset_pop(&parked), -1))
+                                goto fail4;
+                        }
+                    }
+                } else {
+                    for (int64_t j = fp0 + k - 1; j >= fp0; j--) {
+                        double start = t > sl_free ? t : sl_free;
+                        sl_waited += start - t;
+                        t = start + lock_time;
+                        sl_free = t;
+                        if (ring_push_back(&shared, j)) goto fail4;
+                        if (parked.used) {
+                            seq++;
+                            if (heap_push(&evq, t + wake_latency, seq,
+                                          (int32_t)pyset_pop(&parked), -1))
+                                goto fail4;
+                        }
+                    }
+                }
+                break;
+            }
+            double w2 = wpo[parent];
+            if (w2 > 0.0) {
+                /* join continuation with the parent's locality profile */
+                int64_t pn2 = exec_node[parent];
+                double pen2 = mu_lam * (fr[parent] * root_dist[n] +
+                                        fp[parent] * (double)node_dist[n * NN + pn2]);
+                double c2 = w2 * (1.0 + pen2);
+                if (has_faults)
+                    c2 = c2 * fspeed[core];
+                remote += w2 * pen2;
+                total_exec += c2;
+                agg_node_remote[n] += w2 * pen2;
+                t += c2;
+            }
+            node = parent;
+        }
+        if (t > makespan)
+            makespan = t;
+        seq++;
+        if (heap_push(&evq, t, seq, (int32_t)th, -1)) goto fail4;
+    }
+
+    if (status == 0 && executed != n_tasks)
+        status = 2;             /* loop drained with work stranded */
+    if (status != 1)
+        last_t = makespan;
+    dout[0] = makespan;
+    dout[1] = remote;
+    dout[2] = total_exec;
+    dout[3] = sl_waited;
+    dout[4] = fault_lost;
+    dout[5] = last_t;
+    iout[0] = steals;
+    iout[1] = failed;
+    iout[2] = reclaimed;
+    iout[3] = reexec;
+    iout[4] = executed;
+    iout[5] = steps;
+    iout[6] = status;
+    rc = 0;
+
+fail4:
+    pyset_free(&parked);
+fail3:
+    free(evq.e);
+fail2:
+    free(shared.buf);
+fail1:
+    if (local)
+        for (int64_t i = 0; i < T; i++)
+            free(local[i].buf);
+    free(wcur);
+    free(local); free(dl_free); free(uidx); free(order);
+    free(phase); free(exec_node); free(pending);
+    return rc;
+}

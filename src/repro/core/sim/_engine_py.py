@@ -161,6 +161,19 @@ def run(ctx) -> dict:
     steps = 0
     status = 0
     last_t = 0.0
+    # always-on locality aggregates (O(1) per event; see SimResult)
+    steal_hops = [0] * (ctx.get("max_hop", 0) + 1)
+    node_tasks = [0] * NN
+    node_remote = [0.0] * NN
+    # event tracing: extend flat row-major lists in the hot loop,
+    # columnize once at the end (TraceBuffer.from_flat) — an order of
+    # magnitude cheaper per event than indexed array stores
+    tracing = bool(ctx.get("trace"))
+    ex_ev: list = []
+    st_ev: list = []
+    mg_ev: list = []
+    ex_append, st_append, mg_append = \
+        ex_ev.extend, st_ev.extend, mg_ev.extend
 
     def go_offline(now, th, task, cidx):
         # Thread `th` hits offline window `cidx` at `now`, carrying
@@ -256,6 +269,13 @@ def run(ctx) -> dict:
                             dl_free[v] = t
                             steals += 1
                             task = lv.popleft()  # steal from the back
+                            # hop distance thief-core → victim-core (the
+                            # stolen task's data locality, independent of
+                            # the probe cost, which models queue metadata)
+                            d = nd_l[core_node_l[ct]][core_node_l[cores[v]]]
+                            steal_hops[d] += 1
+                            if tracing:
+                                st_append((t, th, v, task, d))
                             break
                         failed += 1
                     if task < 0:
@@ -280,8 +300,11 @@ def run(ctx) -> dict:
 
         # ---- run `task` on thread th at time t ----
         if migration_rate > 0.0 and rng.random_sample() < migration_rate:
+            oldc = cores[th]
             cores[th] = int(rng.randint(num_cores_m))
             t += cache_refill
+            if tracing:
+                mg_append((t, th, oldc, cores[th]))
         core = cores[th]
         n = core_node_l[core]
         exec_node[task] = n
@@ -315,6 +338,12 @@ def run(ctx) -> dict:
                 continue
         remote += w * pen
         total_exec += cost
+        node_tasks[n] += 1
+        node_remote[n] += w * pen
+        if tracing:
+            ex_append((task, th, core, n,
+                       len(local[th]) if depth_first else len(shared),
+                       t, t + cost))
         t += cost
         executed += 1
 
@@ -417,6 +446,7 @@ def run(ctx) -> dict:
                     c2 = c2 * fspeed[core]
                 remote += w2 * pen2
                 total_exec += c2
+                node_remote[n] += w2 * pen2
                 t += c2
             node = parent
         if t > makespan:
@@ -429,10 +459,16 @@ def run(ctx) -> dict:
         last_t = makespan
     elif status == 0:
         last_t = makespan
-    return dict(makespan=makespan, remote=remote, total_exec=total_exec,
-                queue_wait=sl_waited, steals=steals, failed=failed,
-                reclaimed=reclaimed, reexec=reexec, fault_lost=fault_lost,
-                executed=executed, steps=steps, status=status, last_t=last_t)
+    out = dict(makespan=makespan, remote=remote, total_exec=total_exec,
+               queue_wait=sl_waited, steals=steals, failed=failed,
+               reclaimed=reclaimed, reexec=reexec, fault_lost=fault_lost,
+               executed=executed, steps=steps, status=status, last_t=last_t,
+               steal_hops=steal_hops, node_tasks=node_tasks,
+               node_remote=node_remote)
+    if tracing:
+        from .trace import TraceBuffer
+        out["trace"] = TraceBuffer.from_flat(ex_ev, st_ev, mg_ev)
+    return out
 
 
 # ------------------------------------------------------------------ #

@@ -432,7 +432,9 @@ class ExecContext:
         list that lowers identically share one identity), the
         runtime-data/migration knobs, the fault model fields, and the
         cost-model constants from ``params``. Execution knobs that
-        cannot change a result (``SimParams.workers``) are excluded.
+        cannot change a result (``SimParams.workers``,
+        ``SimParams.trace`` — tracing is purely observational) are
+        excluded.
         The persistent result store keys cells on this. Cached (the
         context is frozen and shared across sweep cells).
         """
@@ -442,7 +444,7 @@ class ExecContext:
             pfields = tuple(
                 (f.name, getattr(self.params, f.name))
                 for f in dataclasses.fields(self.params)
-                if f.name != "workers")
+                if f.name not in ("workers", "trace"))
             material = (self.topo.fingerprint(), self.thread_cores,
                         self.root_data_nodes, self.runtime_data_node,
                         self.migration_rate,

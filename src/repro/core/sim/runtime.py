@@ -219,6 +219,11 @@ class SimParams:
     # <= 0 defers to REPRO_SIM_WORKERS, then os.cpu_count(). 1 is the
     # serial path. Results are bit-identical at any worker count.
     workers: int = 0
+    # record a full event trace (see trace.TraceBuffer) on SimResult.trace.
+    # Purely observational: metrics are bit-identical traced vs untraced
+    # (the untraced hot path carries no per-event bookkeeping), and the
+    # flag is excluded from ExecContext.fingerprint() like ``workers``.
+    trace: bool = False
 
 
 @dataclasses.dataclass
@@ -235,9 +240,20 @@ class SimResult:
     reclaimed: int = 0           # tasks made re-stealable by offline threads
     reexec: int = 0              # executions aborted mid-run and re-executed
     fault_lost: float = 0.0      # partial work discarded by preemption/failure
+    # ---- always-on locality aggregates (cheap O(1) counters; excluded
+    # from equality like ``engine`` so golden fixtures stay valid) ----
+    # successful steals by hop distance: steal_hops[d] = steals at d hops
+    steal_hops: tuple = dataclasses.field(default=(), compare=False)
+    # per exec node: tasks executed there / NUMA penalty time paid there
+    node_tasks: tuple = dataclasses.field(default=(), compare=False)
+    node_remote: tuple = dataclasses.field(default=(), compare=False)
     # which engine actually ran ('c' or 'py'); excluded from equality so
     # cross-engine parity checks compare metrics only.
     engine: str = dataclasses.field(default="", compare=False)
+    # full event trace (a trace.TraceBuffer) when SimParams(trace=True);
+    # stripped to a sidecar .npz by ResultStore.put.
+    trace: "object | None" = dataclasses.field(default=None, compare=False,
+                                               repr=False)
 
 
 def _root_data_setup(topo: Topology, core: int, root_data_nodes):
@@ -471,6 +487,10 @@ def _prepare_ctx(ectx: ExecContext,
         ms = 10_000 + 1_000 * len(cores) + 50 * (tbl.n + nw)
     ctx["max_steps"] = int(ms)
     ctx["scheduler_name"] = spec.name
+    # trace capture flag + hop-histogram width (max hop distance + 1);
+    # the always-on aggregates need the width even when tracing is off.
+    ctx["trace"] = bool(getattr(p, "trace", False))
+    ctx["max_hop"] = int(ctx["node_dist_flat"].max())
     # Fresh per-config stream, seeded exactly as the seed engine did.
     # Victim-plan compilation consumes no draws, so the engine always
     # starts from RandomState(seed)'s initial state.
@@ -488,6 +508,13 @@ def _finish_result(ctx: dict, out: dict, serial: float,
                          out.get("executed", 0), ctx["table"].n)
     makespan = out["makespan"]
     rf = out["remote"] / max(out["total_exec"], 1e-12)
+    tr = out.get("trace")
+    if tr is not None:
+        tr.meta.update(
+            scheduler=ctx.get("scheduler_name", "?"), seed=int(ctx["seed"]),
+            engine=engine, threads=int(ctx["T"]),
+            num_nodes=int(ctx["num_nodes"]), num_cores=int(ctx["num_cores"]),
+            tasks=int(ctx["table"].n), makespan=float(makespan))
     return SimResult(
         makespan=makespan,
         serial_time=serial,
@@ -500,7 +527,11 @@ def _finish_result(ctx: dict, out: dict, serial: float,
         reclaimed=out.get("reclaimed", 0),
         reexec=out.get("reexec", 0),
         fault_lost=out.get("fault_lost", 0.0),
+        steal_hops=tuple(int(x) for x in out.get("steal_hops", ())),
+        node_tasks=tuple(int(x) for x in out.get("node_tasks", ())),
+        node_remote=tuple(float(x) for x in out.get("node_remote", ())),
         engine=engine,
+        trace=out.get("trace"),
     )
 
 

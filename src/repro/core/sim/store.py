@@ -24,6 +24,14 @@ Only *successes* are journaled. Failures (stalls, engine errors,
 timeouts) are represented in the run's return value but never
 persisted, so a resumed campaign always re-attempts them.
 
+Event traces (``SimResult.trace``, present under ``SimParams(trace=
+True)``) do not belong in a JSONL line: a paper-scale trace is tens of
+MB of flat arrays. ``put`` spills them to *sidecar* ``.npz`` files —
+``<journal stem>.traces/<cell key>.npz`` — and journals the result with
+``trace=None``; :meth:`ResultStore.get_trace` loads a sidecar back by
+cell key (the :mod:`analysis` loader's journal entry point). Sidecar
+writes are atomic (tmp + rename) and first-write-wins like the journal.
+
 Floats round-trip exactly: ``json`` serializes Python floats via
 ``repr``, which is shortest-round-trip, and parses back to the same
 IEEE-754 double — a replayed result is bit-identical to the simulated
@@ -128,6 +136,11 @@ class ResultStore:
                 if "k" not in doc:
                     continue     # header / future metadata line
                 res = SimResult(**doc["r"])
+                # JSON round-trips the aggregate tuples as lists;
+                # normalize so a replayed result matches a fresh one
+                res.steal_hops = tuple(res.steal_hops)
+                res.node_tasks = tuple(res.node_tasks)
+                res.node_remote = tuple(res.node_remote)
             except (ValueError, TypeError):
                 bad += 1
                 continue
@@ -163,10 +176,60 @@ class ResultStore:
     def put(self, key: str, result: SimResult) -> None:
         if key in self._index:
             return               # first write wins
+        tr = getattr(result, "trace", None)
+        if tr is not None:
+            # spill the event trace to its sidecar and journal the
+            # result without it (a trace is MBs of arrays, not a line)
+            self._spill_trace(key, tr)
+            result = dataclasses.replace(result, trace=None)
         self._index[key] = result
         self._commit(json.dumps(
             {"k": key, "r": dataclasses.asdict(result)},
             separators=(",", ":")))
+
+    # ------------------------------------------------------------------
+    def trace_dir(self) -> str:
+        """Sidecar directory for spilled event traces."""
+        stem = self.path
+        if stem.endswith(".jsonl"):
+            stem = stem[:-len(".jsonl")]
+        return stem + ".traces"
+
+    def trace_path(self, key: str) -> str:
+        """Sidecar ``.npz`` path for ``key`` (may not exist)."""
+        return os.path.join(self.trace_dir(), f"{key}.npz")
+
+    def _spill_trace(self, key: str, tr) -> None:
+        path = self.trace_path(key)
+        if os.path.exists(path):
+            return               # first write wins, like the journal
+        d = self.trace_dir()
+        os.makedirs(d, exist_ok=True)
+        import tempfile
+        fd, tmp = tempfile.mkstemp(suffix=".npz", dir=d)
+        os.close(fd)
+        try:
+            tr.save_npz(tmp)
+            os.replace(tmp, path)
+        finally:
+            if os.path.exists(tmp):
+                os.unlink(tmp)
+
+    def get_trace(self, key: str):
+        """Load the spilled event trace for ``key``, or None."""
+        path = self.trace_path(key)
+        if not os.path.exists(path):
+            return None
+        from .trace import TraceBuffer
+        return TraceBuffer.load_npz(path)
+
+    def keys(self):
+        """Journaled cell keys (insertion order)."""
+        return iter(self._index)
+
+    def items(self):
+        """(key, SimResult) pairs for every journaled cell."""
+        return self._index.items()
 
     def __contains__(self, key: str) -> bool:
         return key in self._index

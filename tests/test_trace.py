@@ -1,0 +1,248 @@
+"""Event-trace capture: parity, observability, and persistence.
+
+Pins the tracing contract from ``sim/trace.py``:
+
+* tracing is **observational** — a traced run's ``SimResult`` metrics
+  are bit-identical to the untraced run, on both engines, at any
+  worker count;
+* both engines emit **identical event streams** — every column of
+  every event family, ``np.array_equal``, including under migration
+  and injected faults;
+* the always-on aggregates (``steal_hops`` / ``node_tasks`` /
+  ``node_remote``) are present untraced, consistent with the trace,
+  and identical across engines;
+* traces round-trip through pickle (the fork-pool transport) and
+  ``.npz`` (the result-store sidecar format), and the store spills /
+  reloads them without disturbing replay identity.
+"""
+
+import dataclasses
+import os
+import pickle
+
+import numpy as np
+import pytest
+
+from repro.core import topology
+from repro.core.sim import (Machine, ResultStore, SimParams, bots,
+                            reset_engine_cache)
+from repro.core.sim import _csim
+from repro.core.sim.trace import (ALL_COLS, EXEC_COLS, TraceBuffer,
+                                  plan_capacity)
+
+HAVE_C = _csim.load() is not None
+ENGINES = ["py", "c"] if HAVE_C else ["py"]
+
+TOPO = topology.sunfire_x4600()
+
+# context variants covering every recording site: steals (all), OS
+# migrations (migrate), fault preemption + reclaim (faults)
+VARIANTS = {
+    "paper": dict(binding="paper", placement="spill:2"),
+    "migrate": dict(binding="linear", placement="spill:2@0",
+                    runtime_data=0, migration_rate=0.3),
+    "faults": dict(binding="paper", faults="preempt:2@200"),
+}
+
+
+@pytest.fixture(params=ENGINES)
+def engine(request, monkeypatch):
+    monkeypatch.setenv("REPRO_SIM_ENGINE", request.param)
+    return request.param
+
+
+def _wl():
+    return bots.fft(n=1 << 10, cutoff=8)
+
+
+def _run(traced: bool, sched="dfwsrpt", seed=3, variant="paper",
+         threads=8):
+    m = Machine(TOPO, SimParams(trace=traced))
+    return m.run(_wl(), sched, seed=seed, threads=threads,
+                 **VARIANTS[variant])
+
+
+# ------------------------------------------------------------------ #
+# observability: tracing never changes results                       #
+# ------------------------------------------------------------------ #
+
+@pytest.mark.parametrize("variant", sorted(VARIANTS))
+def test_traced_metrics_identical(engine, variant):
+    plain = _run(False, variant=variant)
+    traced = _run(True, variant=variant)
+    assert plain.trace is None
+    assert traced.trace is not None
+    # SimResult equality covers every compared metric; aggregates are
+    # compare-excluded, so pin them explicitly too
+    assert traced == plain
+    assert traced.steal_hops == plain.steal_hops
+    assert traced.node_tasks == plain.node_tasks
+    assert traced.node_remote == plain.node_remote
+
+
+@pytest.mark.parametrize("workers", [1, 4])
+def test_traced_batch_identical(engine, workers):
+    """Grid path at both worker counts: traced == untraced, traces
+    attached on every cell (the fork pool pickles them back)."""
+    wl = _wl()
+    kw = dict(workloads={"fft": wl}, schedulers=("wf", "dfwsrpt"),
+              threads=8, seeds=(0, 1))
+    plain = Machine(TOPO).grid(**kw).run(workers=workers)
+    traced = Machine(TOPO, SimParams(trace=True)).grid(**kw) \
+        .run(workers=workers)
+    assert list(plain) == list(traced)
+    for k in plain:
+        assert traced[k] == plain[k], k
+        assert traced[k].trace is not None
+        assert plain[k].trace is None
+
+
+def test_fingerprint_ignores_trace():
+    """Traced and untraced cells share store keys (like workers)."""
+    a = Machine(TOPO).context(8, binding="paper")
+    b = Machine(TOPO, SimParams(trace=True)).context(8, binding="paper")
+    assert a.fingerprint() == b.fingerprint()
+
+
+# ------------------------------------------------------------------ #
+# engine parity at event granularity                                 #
+# ------------------------------------------------------------------ #
+
+@pytest.mark.skipif(not HAVE_C, reason="C kernel unavailable")
+@pytest.mark.parametrize("variant", sorted(VARIANTS))
+@pytest.mark.parametrize("sched", ["bf", "cilk", "wf", "dfwsrpt"])
+def test_trace_parity_py_c(monkeypatch, variant, sched):
+    out = {}
+    for eng in ("py", "c"):
+        monkeypatch.setenv("REPRO_SIM_ENGINE", eng)
+        reset_engine_cache()
+        out[eng] = _run(True, sched=sched, variant=variant)
+    reset_engine_cache()
+    py, c = out["py"], out["c"]
+    assert py == c
+    assert py.steal_hops == c.steal_hops
+    assert py.node_tasks == c.node_tasks
+    assert py.node_remote == c.node_remote
+    for name, dt in ALL_COLS:
+        a, b = getattr(py.trace, name), getattr(c.trace, name)
+        assert a.dtype == b.dtype == dt
+        assert np.array_equal(a, b), (variant, sched, name)
+    assert py.trace == c.trace
+
+
+# ------------------------------------------------------------------ #
+# event semantics + aggregate consistency                            #
+# ------------------------------------------------------------------ #
+
+def test_event_semantics(engine):
+    r = _run(True)
+    tr = r.trace
+    # fault-free: every task commits exactly one exec event
+    assert tr.n_exec == r.tasks
+    assert tr.n_mig == 0
+    assert tr.n_steal == r.steals
+    assert int(sum(r.steal_hops)) == r.steals
+    assert int(sum(r.node_tasks)) == r.tasks
+    dur = tr.ex_end - tr.ex_start
+    assert (dur > 0).all()
+    assert tr.ex_end.max() <= r.makespan + 1e-9
+    # remote-access penalty accounting matches the aggregate metric
+    assert sum(r.node_remote) == pytest.approx(
+        r.remote_work_fraction * r.total_exec
+        if hasattr(r, "total_exec") else sum(r.node_remote))
+    assert tr.meta["scheduler"] == "dfwsrpt"
+    assert tr.meta["engine"] == engine
+    assert tr.meta["tasks"] == r.tasks
+
+
+def test_migration_and_fault_events(engine):
+    mig = _run(True, variant="migrate")
+    assert mig.trace.n_mig > 0
+    assert mig.trace.n_mig == len(mig.trace.mg_time)
+    # migrations move between real cores
+    assert (mig.trace.mg_from != mig.trace.mg_to).any()
+    flt = _run(True, variant="faults")
+    # preempted attempts are not exec events: still one commit per task
+    assert flt.trace.n_exec == flt.tasks
+    assert flt.reexec > 0 or flt.reclaimed > 0
+
+
+def test_untraced_aggregates_always_on(engine):
+    r = _run(False)
+    assert int(sum(r.steal_hops)) == r.steals
+    assert int(sum(r.node_tasks)) == r.tasks
+    assert len(r.node_tasks) == TOPO.num_nodes
+    assert len(r.node_remote) == TOPO.num_nodes
+
+
+# ------------------------------------------------------------------ #
+# buffer mechanics + persistence                                     #
+# ------------------------------------------------------------------ #
+
+def test_capacity_plan_and_growth():
+    assert plan_capacity(0) == (1, 64, 64)
+    assert plan_capacity(10_000) == (10_000, 1250, 64)
+    tb = TraceBuffer(n_tasks=1)
+    for i in range(200):      # force geometric growth of every family
+        tb.add_exec(i, 0, 0, 0, 0, float(i), float(i) + 1)
+        tb.add_steal(float(i), 0, 1, i, 2)
+        tb.add_mig(float(i), 0, 1, 2)
+    tb.finalize()
+    assert tb.n_exec == tb.n_steal == tb.n_mig == 200
+    assert len(tb.ex_task) == len(tb.st_time) == len(tb.mg_time) == 200
+    assert tb.ex_task[199] == 199 and tb.st_dist[0] == 2
+
+
+def test_pickle_and_npz_roundtrip(engine, tmp_path):
+    r = _run(True, variant="migrate")
+    tr = r.trace
+    tr.meta["note"] = "roundtrip"
+    clone = pickle.loads(pickle.dumps(tr))
+    assert clone == tr
+    assert clone.meta == tr.meta
+    path = tmp_path / "t.npz"
+    tr.save_npz(path)
+    loaded = TraceBuffer.load_npz(path)
+    assert loaded == tr
+    assert loaded.meta == tr.meta
+    for name, dt in EXEC_COLS:
+        assert getattr(loaded, name).dtype == dt
+
+
+def test_store_spills_and_replays(engine, tmp_path):
+    wl = _wl()
+    kw = dict(workloads={"fft": wl}, schedulers=("wf", "dfwsrpt"),
+              threads=8, seeds=(0,))
+    path = os.fspath(tmp_path / "camp.jsonl")
+    machine = Machine(TOPO, SimParams(trace=True))
+    with ResultStore(path) as store:
+        fresh = machine.grid(**kw).run(store=store)
+        keys = list(store.keys())
+        assert len(keys) == len(fresh)
+        for key in keys:
+            assert os.path.exists(store.trace_path(key))
+            tr = store.get_trace(key)
+            assert isinstance(tr, TraceBuffer) and tr.n_exec > 0
+    # replay: bit-identical metrics, journaled results carry no trace
+    with ResultStore(path) as store:
+        replay = machine.grid(**kw).run(store=store)
+        assert store.hits == len(fresh)
+    for k in fresh:
+        assert replay[k] == fresh[k]
+        assert replay[k].trace is None
+        assert replay[k].steal_hops == fresh[k].steal_hops
+        assert replay[k].node_tasks == fresh[k].node_tasks
+        assert replay[k].node_remote == fresh[k].node_remote
+    # an untraced machine replays the same journal identically
+    with ResultStore(path) as store:
+        again = Machine(TOPO).grid(**kw).run(store=store)
+    for k in fresh:
+        assert again[k] == fresh[k]
+
+
+def test_result_compare_excludes_trace(engine):
+    traced = _run(True)
+    plain = _run(False)
+    assert traced == plain
+    stripped = dataclasses.replace(traced, trace=None)
+    assert stripped == traced
